@@ -1,0 +1,94 @@
+"""Shared helpers for the paper-fidelity benchmarks."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import codec, get_compressor
+from repro.models.fnn import fnn_loss, init_fnn
+from repro.optim import sgd_momentum
+
+
+def timeit(fn, *args, warmup=2, iters=5):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def simulate_sparsified_sgd(compressor: str, *, workers=16, ratio=0.001,
+                            steps=150, lr=0.05, seed=0, batch=64,
+                            collect_u_hist_at=(), k_override=None):
+    """Single-process simulation of paper Eq. (2) on FNN-3 with synthetic
+    MNIST-like data.  Returns (losses, accs, comm_elems_per_step, hists)."""
+    from repro.data import mnist_like
+
+    params = init_fnn(jax.random.PRNGKey(seed))
+    opt = sgd_momentum(0.9)
+    mom = opt.init(params)
+    leaves, treedef = jax.tree.flatten(params)
+    dims = [l.size for l in leaves]
+    dense = compressor == "none"
+    spec = None if dense else get_compressor(compressor)
+    resid = [jnp.zeros((workers, d)) for d in dims]
+
+    grad_fn = jax.jit(jax.value_and_grad(lambda p, b: fnn_loss(p, b),
+                                         has_aux=True))
+    # one jitted compress step per leaf shape — eager dispatch with
+    # python-int fold_in constants would compile thousands of executables
+    # and exhaust the JIT commit limit
+    compress_fns = {}
+    if not dense:
+        for li, d in enumerate(dims):
+            k = (k_override(d) if k_override
+                 else max(1, int(np.ceil(ratio * d))))
+            k = min(k, d)
+
+            def make(d=d, k=k):
+                def f(u, key):
+                    v, i = spec.select(u, k, key)
+                    dec = codec.decode(v, i, d)
+                    return dec, codec.nnz(i)
+                return jax.jit(f)
+            compress_fns[li] = make()
+    losses, accs, comm, hists = [], [], [], {}
+    for t in range(steps):
+        gsum = [jnp.zeros((d,)) for d in dims]
+        tot_loss = tot_acc = 0.0
+        n_sel = 0
+        for w in range(workers):
+            b = mnist_like(t * workers + w, batch=batch, seed=seed + 17)
+            (l, m), g = grad_fn(params, b)
+            tot_loss += float(l) / workers
+            tot_acc += float(m["acc"]) / workers
+            g_leaves = treedef.flatten_up_to(g)
+            for li, gl in enumerate(g_leaves):
+                d = dims[li]
+                if dense:
+                    gsum[li] = gsum[li] + gl.reshape(-1)
+                    n_sel += d
+                    continue
+                u = resid[li][w] + gl.reshape(-1)
+                if w == 0 and li == 1 and t in collect_u_hist_at:
+                    hists[t] = np.histogram(np.asarray(u), bins=60)
+                key = jax.random.fold_in(
+                    jax.random.PRNGKey(seed + 99),
+                    jnp.uint32(t * 1000 + w * 10 + li))
+                dec, nnz = compress_fns[li](u, key)
+                resid[li] = resid[li].at[w].set(u - dec)
+                gsum[li] = gsum[li] + dec
+                n_sel += int(nnz)
+        agg = treedef.unflatten(
+            [(s / workers).reshape(l.shape) for s, l in zip(gsum, leaves)])
+        params, mom = opt.update(params, mom, agg, jnp.float32(lr))
+        leaves = jax.tree.leaves(params)
+        losses.append(tot_loss)
+        accs.append(tot_acc)
+        comm.append(n_sel)
+    return losses, accs, comm, hists

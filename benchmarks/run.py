@@ -1,0 +1,49 @@
+"""Benchmark harness — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows (and a summary).
+
+Each module runs in its own subprocess: the XLA-CPU JIT accumulates
+dylib state across many compilations in one process and eventually fails
+to materialize symbols; process isolation sidesteps it and makes module
+failures independent.
+"""
+from __future__ import annotations
+
+import subprocess
+import sys
+import time
+
+MODULES = ["fig5_bound", "fig2_histograms", "fig1_fig6_convergence",
+           "fig4_selection_speed", "fig10_sensitivity", "table2_scaling"]
+
+
+def run_module(name: str) -> int:
+    import importlib
+    mod = importlib.import_module(f"benchmarks.{name}")
+    t0 = time.time()
+    try:
+        rows = mod.run()
+    except Exception as e:  # noqa: BLE001
+        print(f"{name},0,ERROR:{type(e).__name__}:{e}", flush=True)
+        return 1
+    for r in rows:
+        print(",".join(str(x) for x in r), flush=True)
+    print(f"{name}/_wall_s,{(time.time() - t0) * 1e6:.0f},"
+          f"wall={time.time() - t0:.1f}s", flush=True)
+    return 0
+
+
+def main() -> None:
+    if len(sys.argv) > 1:
+        names = [m for m in MODULES if sys.argv[1] in m]
+        sys.exit(sum(run_module(n) for n in names))
+    print("name,us_per_call,derived", flush=True)
+    failures = 0
+    for name in MODULES:
+        r = subprocess.run([sys.executable, "-m", "benchmarks.run", name])
+        failures += r.returncode != 0
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

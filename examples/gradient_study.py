@@ -1,0 +1,61 @@
+"""Paper §3.1 gradient-distribution study, reproduced on a transformer:
+train with TopK-SGD, collect u_t = g_t + e_t histograms, verify the
+bell shape, and compare the exact Top-k contraction against the paper's
+(1-k/d)^2 bound on REAL accumulated gradients (not just Gaussian noise).
+
+    PYTHONPATH=src python examples/gradient_study.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bounds, codec, get_compressor
+from repro.data import lm_batch
+from repro.models import ModelConfig, init_params, loss_fn
+from repro.optim import sgd_momentum
+
+
+def main():
+    cfg = ModelConfig(name="study", arch_type="dense", num_layers=2,
+                      d_model=128, num_heads=4, num_kv_heads=2, d_ff=256,
+                      vocab_size=256).validate()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = sgd_momentum(0.9)
+    mom = opt.init(params)
+    spec = get_compressor("topk")
+    ratio = 0.005
+
+    leaves, treedef = jax.tree.flatten(params)
+    resid = [jnp.zeros((l.size,)) for l in leaves]
+    grad_fn = jax.jit(jax.grad(lambda p, b: loss_fn(p, cfg, b,
+                                                    remat=False)[0]))
+    print("iter  leaf              frac|u|<10%max   gamma_exact  (1-k/d)^2")
+    for t in range(61):
+        batch = lm_batch(t, global_batch=8, seq_len=64,
+                         vocab=cfg.vocab_size)
+        g = grad_fn(params, batch)
+        g_leaves = treedef.flatten_up_to(g)
+        agg = []
+        for li, gl in enumerate(g_leaves):
+            d = gl.size
+            k = max(1, int(np.ceil(ratio * d)))
+            u = resid[li] + gl.reshape(-1)
+            v, i = spec.select(u, k, None)
+            dec = codec.decode(v, i, d)
+            resid[li] = u - dec
+            agg.append(dec.reshape(gl.shape))
+            if t in (20, 60) and d > 10_000 and li in (1, 2):
+                au = np.abs(np.asarray(u))
+                frac = float((au < 0.1 * au.max()).mean())
+                gam = float(bounds.gamma_exact(u, k))
+                bp = bounds.bound_paper(k, d)
+                print(f"{t:4d}  leaf{li} (d={d:8d})   {frac:10.3f}   "
+                      f"{gam:10.4f}  {bp:9.4f}  "
+                      f"{'OK' if gam <= bp else 'VIOLATED'}")
+        agg = treedef.unflatten(agg)
+        params, mom = opt.update(params, mom, agg, jnp.float32(0.1))
+    print("done: Theorem 1 bound checked on real transformer u_t")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Render the dry-run JSONs into the EXPERIMENTS.md tables.
+
+  PYTHONPATH=src python experiments/make_report.py > experiments/report.md
+"""
+import glob
+import json
+import sys
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.1f}"
+
+
+def load_all():
+    recs = []
+    for path in sorted(glob.glob("experiments/dryrun_*.json")):
+        with open(path) as f:
+            recs.extend(json.load(f))
+    return recs
+
+
+def key(r):
+    return (r["arch"], r["shape"], r["mesh"], r.get("compressor"),
+            bool(r.get("hierarchical")), r.get("codec_dtype"))
+
+
+def main():
+    recs = load_all()
+    seen = {}
+    for r in recs:
+        seen[key(r)] = r  # last wins
+    recs = list(seen.values())
+
+    print("### Dry-run matrix (status per arch x shape x mesh)\n")
+    print("| arch | shape | mesh | status | mem/dev GiB | compile s |")
+    print("|---|---|---|---|---|---|")
+    base = [r for r in recs if r.get("compressor") == "gaussiank"
+            and not r.get("hierarchical") and not r.get("codec_dtype")]
+    for r in sorted(base, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        mem = (fmt_bytes(r["memory"]["total_per_device"])
+               if r["status"] == "OK" else "-")
+        cs = r.get("compile_s", "-")
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['status']} "
+              f"| {mem} | {cs} |")
+
+    print("\n### Roofline baseline (16x16, gaussiank, ratio 0.001)\n")
+    print("| arch | shape | compute s | memory s | collective s | dominant "
+          "| model TFLOP/chip | useful | AG GiB | AR GiB |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in sorted(base, key=lambda r: (r["arch"], r["shape"])):
+        if r["status"] != "OK" or r["mesh"] != "16x16":
+            continue
+        rf = r["roofline"]
+        coll = r.get("collectives", {})
+        print(f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.3e} "
+              f"| {rf['memory_s']:.3e} | {rf['collective_s']:.3e} "
+              f"| **{rf['dominant']}** | {rf['model_flops'] / 1e12:.2f} "
+              f"| {min(rf['useful_ratio'], 99):.2f} "
+              f"| {coll.get('all-gather', 0) / 2**30:.2f} "
+              f"| {coll.get('all-reduce', 0) / 2**30:.2f} |")
+
+    print("\n### Variant runs (perf iterations)\n")
+    print("| arch | shape | mesh | compressor | hier | codec | compute s "
+          "| memory s | collective s | dominant |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    var = [r for r in recs if r not in base and r["status"] == "OK"]
+    for r in sorted(var, key=lambda r: (r["arch"], r["shape"], r["mesh"],
+                                        str(r.get("compressor")))):
+        rf = r["roofline"]
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+              f"| {r.get('compressor')} | {r.get('hierarchical')} "
+              f"| {r.get('codec_dtype') or '-'} | {rf['compute_s']:.3e} "
+              f"| {rf['memory_s']:.3e} | {rf['collective_s']:.3e} "
+              f"| {rf['dominant']} |")
+
+    print("\n### Skips\n")
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if r["status"] == "SKIP":
+            print(f"* {r['arch']} x {r['shape']} ({r['mesh']}): "
+                  f"{r['reason']}")
+    fails = [r for r in recs if r["status"] == "FAIL"]
+    if fails:
+        print("\n### FAILURES\n")
+        for r in fails:
+            print(f"* {r['arch']} x {r['shape']} x {r['mesh']}: "
+                  f"{r['error'][:200]}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,38 @@
+"""Re-run the HLO cost analysis over cached .hlo.gz artifacts (no
+recompilation) and update the dryrun JSONs in place.
+
+  PYTHONPATH=src python experiments/reanalyze.py experiments/dryrun_*.json
+"""
+import gzip
+import json
+import sys
+
+from repro.launch import hlo_cost
+from repro.launch import roofline as rl
+
+
+def main(paths):
+    for path in paths:
+        with open(path) as f:
+            recs = json.load(f)
+        changed = 0
+        for r in recs:
+            hp = r.get("hlo_path")
+            if r.get("status") != "OK" or not hp:
+                continue
+            with gzip.open(hp, "rt") as f:
+                hc = hlo_cost.analyze(f.read())
+            coll = hc["collectives"]
+            terms = rl.roofline_terms(
+                hc["flops"], hc["bytes"], coll.get("total", 0.0),
+                r["roofline"]["model_flops"])
+            r["collectives"] = coll
+            r["roofline"] = terms.to_dict()
+            changed += 1
+        with open(path, "w") as f:
+            json.dump(recs, f, indent=1)
+        print(f"{path}: reanalyzed {changed}")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

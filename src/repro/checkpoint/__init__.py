@@ -1,0 +1,3 @@
+from repro.checkpoint.npz import load_state, save_state
+
+__all__ = ["load_state", "save_state"]

@@ -1,0 +1,44 @@
+"""Flat-key npz checkpointing of arbitrary pytrees (params, optimizer
+state, error-feedback residuals, step).  Arrays are gathered to host —
+adequate for the CPU container; on a real cluster this module is the
+single seam to swap for a tensorstore/OCDBT backend."""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            str(getattr(e, "key", getattr(e, "idx", e))) for e in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_state(path: str, state: Any) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp.npz"
+    np.savez(tmp, **_flatten(state))
+    os.replace(tmp, path)
+
+
+def load_state(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shape/dtype validated)."""
+    with np.load(path) as data:
+        flat = dict(data)
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path, leaf in paths:
+        key = _SEP.join(
+            str(getattr(e, "key", getattr(e, "idx", e))) for e in path)
+        arr = flat[key]
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

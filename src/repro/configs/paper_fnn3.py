@@ -1,0 +1,7 @@
+"""paper-fnn3 — the paper's own FNN-3 (Table 1): 3 hidden fully-connected
+layers on MNIST-scale data, 199,210 params, trained with SGD momentum 0.9,
+BS 128, LR 0.01.  Used by the paper-fidelity convergence benchmarks; the
+classifier itself lives in repro.models.fnn."""
+FNN3 = dict(name="paper-fnn3", input_dim=784, hidden=(128, 96, 64),
+            num_classes=10, lr=0.01, momentum=0.9, batch_size=128,
+            source="paper Table 1")

@@ -1,0 +1,79 @@
+"""Assigned input shapes and ShapeDtypeStruct input specs (no allocation).
+
+Shapes (assignment):
+  train_4k     seq 4,096    global_batch 256   training step
+  prefill_32k  seq 32,768   global_batch 32    inference prefill
+  decode_32k   seq 32,768   global_batch 128   inference decode (1 new token)
+  long_500k    seq 524,288  global_batch 1     long-context decode
+
+``long_500k`` requires sub-quadratic attention — it is run only for
+jamba / xlstm / gemma3 (see DESIGN.md §6); `applicable()` encodes the rule.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+INPUT_SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def applicable(cfg: ModelConfig, shape: InputShape) -> tuple[bool, str]:
+    """Whether (arch, shape) is runnable; returns (ok, reason-if-not)."""
+    if shape.name != "long_500k":
+        return True, ""
+    kinds = {cfg.block_kind(i) for i in range(cfg.num_layers)}
+    if kinds & {"mamba", "slstm", "mlstm", "swa"}:
+        return True, ""
+    return False, ("pure full-attention architecture: 500k KV cache decode "
+                   "is out of scope per assignment (no sliding-window/"
+                   "recurrent state to exploit)")
+
+
+def token_dtype():
+    return jnp.int32
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, *,
+                activation_dtype: str | None = None) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this shape.
+
+    train  -> {"tokens"|"embeds", "labels"}
+    prefill-> {"tokens"|"embeds"}
+    decode -> {"tokens"|"embeds" (1 step), "pos"} (the cache is produced by
+              jax.eval_shape(init_cache, ...) inside the step factories)
+    """
+    adt = jnp.dtype(activation_dtype or cfg.activation_dtype)
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        if cfg.frontend == "embeds":
+            return {"embeds": sds((B, S, cfg.d_model), adt),
+                    "labels": sds((B, S), jnp.int32)}
+        return {"tokens": sds((B, S), jnp.int32),
+                "labels": sds((B, S), jnp.int32)}
+    if shape.kind == "prefill":
+        if cfg.frontend == "embeds":
+            return {"embeds": sds((B, S, cfg.d_model), adt)}
+        return {"tokens": sds((B, S), jnp.int32)}
+    # decode: generated tokens always enter through the token embedding
+    return {"tokens": sds((B, 1), jnp.int32),
+            "pos": sds((), jnp.int32)}

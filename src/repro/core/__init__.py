@@ -1,0 +1,12 @@
+"""Core contribution of the paper: Top-k sparsification with error feedback,
+the Gaussian_k approximate selector, and the contraction-bound analysis."""
+from repro.core import bounds, codec, compressors, error_feedback
+from repro.core.codec import SENTINEL, compact_by_mask, decode, decode_add, nnz
+from repro.core.compressors import available, get_compressor
+from repro.core.error_feedback import compress_with_ef, init_residual
+
+__all__ = [
+    "bounds", "codec", "compressors", "error_feedback",
+    "SENTINEL", "compact_by_mask", "decode", "decode_add", "nnz",
+    "available", "get_compressor", "compress_with_ef", "init_residual",
+]

@@ -1,0 +1,52 @@
+"""Numerics for the paper's contraction-bound analysis (§3.2, Fig. 3, Fig. 5).
+
+``gamma_exact``      exact ||u - Top_k(u)||^2 / ||u||^2          (Eq. 5)
+``bound_classic``    1 - k/d   (Stich et al. / Alistarh et al.)  (Eq. 3)
+``bound_paper``      (1 - k/d)^2                                 (Theorem 1)
+``delta_paper``      delta = (2kd - k^2) / d^2                   (Eq. 12)
+``pi_squared``       the sorted-normalised curve of Fig. 3(b)
+``iteration_bound``  T >= O(1/delta^2) comparison (Theorem 2 discussion)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gamma_exact(u: jax.Array, k: int) -> jax.Array:
+    """Exact value of ||u - Top_k(u)||^2 / ||u||^2."""
+    abs_u = jnp.abs(u)
+    topv, _ = jax.lax.top_k(abs_u, k)
+    total = jnp.sum(u.astype(jnp.float64) ** 2) if u.dtype == jnp.float64 \
+        else jnp.sum(u.astype(jnp.float32) ** 2)
+    kept = jnp.sum(topv.astype(total.dtype) ** 2)
+    return (total - kept) / total
+
+
+def bound_classic(k: int, d: int) -> float:
+    return 1.0 - k / d
+
+
+def bound_paper(k: int, d: int) -> float:
+    return (1.0 - k / d) ** 2
+
+
+def delta_paper(k: int, d: int) -> float:
+    return (2.0 * k * d - k * k) / (d * d)
+
+
+def pi_squared(u: jax.Array) -> jax.Array:
+    """pi_(i)^2: sorted |u|/||u||_inf squared, descending (Fig. 3b)."""
+    a = jnp.sort(jnp.abs(u))[::-1]
+    a = a / a[0]
+    return a * a
+
+
+def iterations_to_dense_rate(c: float, use_paper_bound: bool) -> float:
+    """T after which the SGD term dominates (Theorem 2 discussion).
+
+    classic: T >= O(c^2);  paper: T >= O(c^4 / (2c - 1)^2).
+    """
+    if use_paper_bound:
+        return c ** 4 / (2 * c - 1) ** 2
+    return c ** 2

@@ -1,0 +1,60 @@
+"""Fixed-capacity sparse codec for gradient sparsification.
+
+A compressed gradient is a pair ``(values, indices)`` of static shape
+``(k_cap,)``.  Padding slots carry ``indices == SENTINEL`` (= -1) and
+``values == 0``.  Static shapes are mandatory under XLA and make the
+collective volume of the sparse all-gather a compile-time constant —
+this is the TPU adaptation of the paper's variable-length GPU mask
+writes (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+SENTINEL = -1
+
+
+def compact_by_mask(u: jax.Array, mask: jax.Array, k_cap: int):
+    """Compact the masked elements of ``u`` into a fixed ``(k_cap,)`` buffer.
+
+    Elements are kept in index order.  If more than ``k_cap`` elements are
+    masked, the surplus (highest indices) is dropped — error feedback
+    re-absorbs them on the next iteration.
+
+    Returns ``(values, indices)`` with sentinel padding.
+    """
+    d = u.shape[0]
+    mask = mask.astype(jnp.int32)
+    # position of each selected element in the compacted output
+    pos = jnp.cumsum(mask) - 1
+    keep = (mask == 1) & (pos < k_cap)
+    # overflow / unselected elements all write to the scratch slot k_cap
+    slot = jnp.where(keep, pos, k_cap)
+    values = jnp.zeros((k_cap + 1,), u.dtype).at[slot].set(u, mode="drop")
+    indices = jnp.full((k_cap + 1,), SENTINEL, jnp.int32).at[slot].set(
+        jnp.arange(d, dtype=jnp.int32), mode="drop"
+    )
+    return values[:k_cap], indices[:k_cap]
+
+
+def decode(values: jax.Array, indices: jax.Array, d: int) -> jax.Array:
+    """Scatter a compressed ``(values, indices)`` pair back to dense ``(d,)``."""
+    safe = jnp.where(indices == SENTINEL, d, indices)
+    return jnp.zeros((d,), values.dtype).at[safe].set(
+        jnp.where(indices == SENTINEL, 0, values), mode="drop"
+    )
+
+
+def decode_add(dense: jax.Array, values: jax.Array, indices: jax.Array) -> jax.Array:
+    """Scatter-*add* a compressed pair into an existing dense buffer."""
+    d = dense.shape[0]
+    safe = jnp.where(indices == SENTINEL, d, indices)
+    return dense.at[safe].add(
+        jnp.where(indices == SENTINEL, 0, values), mode="drop"
+    )
+
+
+def nnz(indices: jax.Array) -> jax.Array:
+    """Number of real (non-padding) entries in a compressed pair."""
+    return jnp.sum((indices != SENTINEL).astype(jnp.int32))

@@ -1,0 +1,34 @@
+"""Error-feedback (residual accumulation) for sparsified SGD — paper Eq. (2).
+
+    x_{t+1} = x_t - eta/P * sum_p Comp_k(g_t^p + e_t^p)
+    e_{t+1}^p = g_t^p + e_t^p - Comp_k(g_t^p + e_t^p)
+
+The residual lives per data-parallel worker, with the same pytree structure
+(flattened per leaf) as the gradients.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import codec
+from repro.core.compressors import CompressorSpec
+
+
+def init_residual(grads_like) -> dict:
+    """Zero residual pytree matching a gradient pytree (leaf-flattened dtype)."""
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, g.dtype), grads_like)
+
+
+def compress_with_ef(u: jax.Array, spec: CompressorSpec, k: int,
+                     key: Optional[jax.Array] = None):
+    """One error-feedback compression step on a flat vector ``u = g + e``.
+
+    Returns ``(values, indices, residual)`` with
+    ``decode(values, indices) + residual == u`` exactly (conservation).
+    """
+    values, indices = spec.select(u, k, key)
+    residual = u - codec.decode(values, indices, u.shape[0])
+    return values, indices, residual

@@ -1,0 +1,2 @@
+"""Pallas TPU kernels for the paper's compute hot spot: sparsification
+selection.  Validated on CPU via interpret=True against pure-jnp oracles."""

@@ -1,0 +1,8 @@
+from repro.kernels.gaussian_topk.ops import (
+    gaussian_threshold_kernel,
+    gaussiank_select_kernel,
+    select_by_threshold,
+)
+
+__all__ = ["gaussian_threshold_kernel", "gaussiank_select_kernel",
+           "select_by_threshold"]

@@ -1,0 +1,15 @@
+"""Pure-jnp oracles for the gaussian_topk kernels."""
+import jax.numpy as jnp
+
+from repro.core import codec
+from repro.core.compressors import gaussian_threshold as threshold_ref  # noqa: F401
+from repro.core.compressors import gaussiank_select as gaussiank_ref  # noqa: F401
+
+
+def count_gt_ref(u, thres):
+    return jnp.sum((jnp.abs(u) > thres).astype(jnp.int32))
+
+
+def select_by_threshold_ref(u, thres, k_cap):
+    thres = jnp.maximum(thres, 0.0)
+    return codec.compact_by_mask(u, jnp.abs(u) > thres, k_cap)

@@ -1,0 +1,3 @@
+from repro.kernels.histk.ops import histk_cap, histk_select_kernel, histk_threshold
+
+__all__ = ["histk_cap", "histk_select_kernel", "histk_threshold"]

@@ -1,0 +1,47 @@
+"""Hist_k: histogram-threshold top-k selector (beyond-paper, sort-free,
+2 total passes over u: one histogram pass + one compaction pass)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compressors import gaussiank_cap
+from repro.kernels.gaussian_topk.ops import select_by_threshold
+from repro.kernels.histk.hist import abs_histogram, bin_lower_edge, BINS
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block", "interpret"))
+def histk_threshold(u: jax.Array, k: int, *, block: int = 2048,
+                    interpret: bool = True) -> jax.Array:
+    """Threshold = lower edge of the first bin (from the top) whose
+    cumulative count reaches k."""
+    d = u.shape[0]
+    pad = (-d) % block
+    x2d = jnp.pad(u, (0, pad)).reshape(-1, block)
+    h = abs_histogram(x2d, block=block, interpret=interpret)
+    h = h.at[0].add(-pad)            # padding zeros land in bin 0
+    # cumulative count from the top bin downwards
+    from_top = jnp.cumsum(h[::-1])[::-1]
+    # smallest bin b with from_top[b] >= k: select bin edge as threshold
+    reach = from_top >= k
+    # largest bin whose top-cumulative count still reaches k
+    bidx = jnp.max(jnp.where(reach, jnp.arange(BINS), -1))
+    bidx = jnp.clip(bidx, 0, BINS - 1)
+    return bin_lower_edge(bidx.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block", "interpret"))
+def histk_select_kernel(u: jax.Array, k: int, *, block: int = 2048,
+                        interpret: bool = True):
+    """Full Hist_k compressor: histogram threshold + block compaction."""
+    thres = histk_threshold(u, k, block=block, interpret=interpret)
+    k_cap = histk_cap(k, u.shape[0])
+    return select_by_threshold(u, thres, k_cap, block=block,
+                               interpret=interpret)
+
+
+def histk_cap(k: int, d: int) -> int:
+    # one 2^(1/4) bin of slack above k (≈19%) + rounding
+    return gaussiank_cap(k, d)

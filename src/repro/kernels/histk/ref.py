@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the histk kernels."""
+import jax.numpy as jnp
+
+from repro.kernels.histk.hist import BINS, _bin_of
+
+
+def abs_histogram_ref(x):
+    b = _bin_of(jnp.abs(x.astype(jnp.float32).ravel()))
+    return jnp.zeros((BINS,), jnp.float32).at[b].add(1.0)

@@ -1,0 +1,3 @@
+from repro.kernels.moments.ops import mean_std_absmax
+
+__all__ = ["mean_std_absmax"]

@@ -1,0 +1,22 @@
+"""Jitted public wrapper: mean/std/absmax of a flat vector via the Pallas
+single-pass moments kernel (zero-padded to a whole number of tiles)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.moments.moments import moments
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def mean_std_absmax(u: jax.Array, *, block: int = 2048, interpret: bool = True):
+    """(mean, std, absmax) of flat ``u``; padding-safe (pads contribute 0)."""
+    d = u.shape[0]
+    pad = (-d) % block
+    x = jnp.pad(u, (0, pad)).reshape(-1, block)
+    s, sq, mx = moments(x, block=block, interpret=interpret)
+    mean = s / d
+    var = jnp.maximum(sq / d - mean * mean, 0.0)
+    return mean, jnp.sqrt(var), mx

@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the moments kernel."""
+import jax.numpy as jnp
+
+
+def moments_ref(x2d):
+    x = x2d.astype(jnp.float32)
+    return jnp.sum(x), jnp.sum(x * x), jnp.max(jnp.abs(x))

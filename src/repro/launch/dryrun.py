@@ -1,0 +1,294 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+on the production meshes (16×16 single-pod, 2×16×16 multi-pod), print
+memory/cost analysis, and extract roofline terms (§Roofline).
+
+No arrays are ever allocated: parameters, residuals, optimizer state,
+batches and caches are ShapeDtypeStructs carrying NamedShardings.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both --compressor gaussiank --out experiments/dryrun.json
+"""
+import argparse  # noqa: E402
+import functools  # noqa: E402
+import gzip  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import (ARCHS, INPUT_SHAPES, applicable, get_config,  # noqa: E402
+                           input_specs)
+from repro.dist import sharding as shd  # noqa: E402
+from repro.launch import hlo_cost  # noqa: E402
+from repro.launch import roofline as rl  # noqa: E402
+from repro.launch.mesh import (data_axes_of, data_world_size,  # noqa: E402
+                               make_production_mesh, model_axis_size)
+from repro.models import init_cache, init_params  # noqa: E402
+from repro.optim import constant, sgd_momentum  # noqa: E402
+from repro.serve.steps import decode_shardings, make_decode_step  # noqa: E402
+from repro.serve.steps import make_prefill_step, serve_param_specs  # noqa: E402
+from repro.train.state import init_train_state  # noqa: E402
+from repro.train.step import make_train_step  # noqa: E402
+
+DTYPE = "bfloat16"
+
+
+def _with_sharding(sds_tree, spec_tree, mesh):
+    return jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, sp)),
+        sds_tree, spec_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def _bf16(cfg):
+    import dataclasses
+    return dataclasses.replace(cfg, param_dtype=DTYPE,
+                               activation_dtype=DTYPE)
+
+
+def lower_train(cfg, mesh, shape, compressor, hierarchical=False,
+                ratio=0.001, codec_dtype=None):
+    data_axes = data_axes_of(mesh)
+    joint = data_axes if len(data_axes) > 1 else data_axes[0]
+    msize = model_axis_size(mesh)
+    workers = data_world_size(mesh)
+    opt = sgd_momentum(0.9)
+
+    pshapes = jax.eval_shape(functools.partial(init_params, cfg),
+                             jax.random.PRNGKey(0))
+    state_sds = jax.eval_shape(
+        lambda p: init_train_state(
+            p, opt, workers=workers, model_size=msize,
+            with_residual=compressor not in (None, "none"),
+            hierarchical=hierarchical, resid_dtype=jnp.bfloat16),
+        pshapes)
+
+    pspecs = shd.param_specs(pshapes, "model", msize)
+
+    def state_spec(path, leaf):
+        top = str(getattr(path[0], "key", ""))
+        if top in ("resid", "resid2"):
+            return P(joint, "model")
+        if top == "step":
+            return P()
+        return P()  # params/opt: model sharding handled below
+
+    sspecs = jax.tree_util.tree_map_with_path(state_spec, state_sds)
+    # params + momentum share the param sharding rules
+    sspecs["params"] = pspecs
+    sspecs["opt"] = jax.tree.map(lambda _: P(), state_sds["opt"])
+    if "m" in state_sds["opt"]:
+        sspecs["opt"]["m"] = pspecs
+    state_in = _with_sharding(state_sds, sspecs, mesh)
+
+    batch_sds = input_specs(cfg, shape, activation_dtype=DTYPE)
+    bspecs = jax.tree.map(lambda _: P(joint), batch_sds)
+    batch_in = _with_sharding(batch_sds, bspecs, mesh)
+
+    step = make_train_step(cfg, mesh, opt, constant(0.01),
+                           compressor=compressor, ratio=ratio,
+                           hierarchical=hierarchical, remat=True,
+                           codec_dtype=codec_dtype)
+    return step.lower(state_in, batch_in)
+
+
+def lower_prefill(cfg, mesh, shape, serve_mode: str = "2d"):
+    data_axes = data_axes_of(mesh)
+    joint = data_axes if len(data_axes) > 1 else data_axes[0]
+    pshapes = jax.eval_shape(functools.partial(init_params, cfg),
+                             jax.random.PRNGKey(0))
+    pspecs = serve_param_specs(pshapes, mesh, mode=serve_mode)
+    params_in = _with_sharding(pshapes, pspecs, mesh)
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.frontend == "embeds":
+        prompt = jax.ShapeDtypeStruct(
+            (B, S, cfg.d_model), jnp.dtype(DTYPE),
+            sharding=NamedSharding(mesh, P(joint)))
+    else:
+        prompt = jax.ShapeDtypeStruct(
+            (B, S), jnp.int32, sharding=NamedSharding(mesh, P(joint)))
+    fn = make_prefill_step(cfg, mesh, s_max=S).fn
+    return jax.jit(fn).lower(params_in, prompt)
+
+
+def lower_decode(cfg, mesh, shape):
+    B, S = shape.global_batch, shape.seq_len
+    pspecs, cspecs, tok_spec = decode_shardings(cfg, mesh, B, S,
+                                                cache_dtype=jnp.dtype(DTYPE))
+    pshapes = jax.eval_shape(functools.partial(init_params, cfg),
+                             jax.random.PRNGKey(0))
+    cshapes = jax.eval_shape(
+        functools.partial(init_cache, cfg, B, S, jnp.dtype(DTYPE)))
+    params_in = _with_sharding(pshapes, pspecs, mesh)
+    cache_in = _with_sharding(cshapes, cspecs, mesh)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    tok = jax.ShapeDtypeStruct((B, 1), jnp.int32,
+                               sharding=NamedSharding(mesh, tok_spec))
+    fn = make_decode_step(cfg, mesh)
+    return jax.jit(fn).lower(params_in, cache_in, pos, tok)
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, compressor: str,
+            hierarchical: bool = False, ratio: float = 0.001,
+            codec_dtype=None, hlo_dir: str = "experiments/hlo",
+            serve_mode: str = "2d", shard_activations: bool = False) -> dict:
+    cfg = _bf16(get_config(arch))
+    if shard_activations:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, shard_activations=True)
+    shape = INPUT_SHAPES[shape_name]
+    ok, why = applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "kind": shape.kind, "compressor": compressor,
+           "hierarchical": hierarchical,
+           "codec_dtype": str(codec_dtype) if codec_dtype else None,
+           "serve_mode": serve_mode, "shard_activations": shard_activations}
+    if not ok:
+        rec.update(status="SKIP", reason=why)
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    t0 = time.time()
+    try:
+        if shape.kind == "train":
+            lowered = lower_train(cfg, mesh, shape, compressor,
+                                  hierarchical=hierarchical, ratio=ratio,
+                                  codec_dtype=codec_dtype)
+        elif shape.kind == "prefill":
+            lowered = lower_prefill(cfg, mesh, shape, serve_mode=serve_mode)
+        else:
+            lowered = lower_decode(cfg, mesh, shape)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        hlo_txt = compiled.as_text()
+        if hlo_dir:
+            os.makedirs(hlo_dir, exist_ok=True)
+            tag = (f"{arch}_{shape_name}_{rec['mesh']}_{compressor}"
+                   f"{'_hier' if hierarchical else ''}"
+                   f"{'_' + rec['codec_dtype'] if rec['codec_dtype'] else ''}"
+                   f"{'_servemodelonly' if serve_mode != '2d' else ''}"
+                   f"{'_actshard' if shard_activations else ''}")
+            with gzip.open(os.path.join(hlo_dir, tag + ".hlo.gz"), "wt") as f:
+                f.write(hlo_txt)
+            rec["hlo_path"] = os.path.join(hlo_dir, tag + ".hlo.gz")
+        # trip-count-aware analysis (XLA's cost_analysis counts while
+        # bodies once — see launch/hlo_cost.py)
+        hc = hlo_cost.analyze(hlo_txt)
+        coll = hc["collectives"]
+        pshapes = jax.eval_shape(functools.partial(init_params, cfg),
+                                 jax.random.PRNGKey(0))
+        total_p, active_p = rl.active_params(pshapes, cfg)
+        mf_global = rl.model_flops(cfg, total_p, active_p, shape.kind,
+                                   shape.global_batch, shape.seq_len)
+        terms = rl.roofline_terms(hc["flops"], hc["bytes"],
+                                  coll.get("total", 0.0),
+                                  mf_global / chips)
+        rec.update(
+            status="OK",
+            chips=chips,
+            lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            memory=dict(
+                argument_bytes=ma.argument_size_in_bytes,
+                output_bytes=ma.output_size_in_bytes,
+                temp_bytes=ma.temp_size_in_bytes,
+                alias_bytes=ma.alias_size_in_bytes,
+                total_per_device=(ma.argument_size_in_bytes +
+                                  ma.output_size_in_bytes +
+                                  ma.temp_size_in_bytes -
+                                  ma.alias_size_in_bytes),
+            ),
+            collectives={k: v for k, v in coll.items()},
+            xla_cost={"flops": float(ca.get("flops", 0.0)),
+                      "bytes_accessed": float(ca.get("bytes accessed", 0.0))},
+            roofline=terms.to_dict(),
+            params_total=total_p, params_active=active_p,
+        )
+    except Exception as e:  # noqa: BLE001 — dry-run failures are data
+        rec.update(status="FAIL", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--compressor", default="gaussiank")
+    ap.add_argument("--hierarchical", action="store_true")
+    ap.add_argument("--ratio", type=float, default=0.001)
+    ap.add_argument("--codec-dtype", default=None,
+                    help="wire dtype for codec values, e.g. bfloat16")
+    ap.add_argument("--serve-mode", default="2d", choices=["2d", "model-only"])
+    ap.add_argument("--shard-activations", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun.json")
+    args = ap.parse_args()
+
+    archs = sorted(ARCHS) if args.arch == "all" else args.arch.split(",")
+    shapes = (list(INPUT_SHAPES) if args.shape == "all"
+              else args.shape.split(","))
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    cdt = jnp.dtype(args.codec_dtype) if args.codec_dtype else None
+    done = {(r["arch"], r["shape"], r["mesh"], r.get("compressor"),
+             r.get("hierarchical", False), r.get("codec_dtype"),
+             r.get("serve_mode", "2d"), r.get("shard_activations", False))
+            for r in results if r.get("status") in ("OK", "SKIP")}
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                key = (arch, shape, "2x16x16" if mp else "16x16",
+                       args.compressor, args.hierarchical,
+                       str(cdt) if cdt else None, args.serve_mode,
+                       args.shard_activations)
+                if key in done:
+                    continue
+                print(f"== {arch} x {shape} x {key[2]} "
+                      f"[{args.compressor}{' hier' if args.hierarchical else ''}]",
+                      flush=True)
+                rec = run_one(arch, shape, mp, args.compressor,
+                              args.hierarchical, args.ratio,
+                              codec_dtype=cdt, serve_mode=args.serve_mode,
+                              shard_activations=args.shard_activations)
+                status = rec["status"]
+                extra = ""
+                if status == "OK":
+                    r = rec["roofline"]
+                    extra = (f" dom={r['dominant']} c={r['compute_s']:.3e} "
+                             f"m={r['memory_s']:.3e} n={r['collective_s']:.3e}"
+                             f" mem/dev={rec['memory']['total_per_device']/2**30:.1f}GiB"
+                             f" compile={rec['compile_s']:.0f}s")
+                elif status == "FAIL":
+                    extra = " " + rec["error"][:200]
+                print(f"   -> {status}{extra}", flush=True)
+                results.append(rec)
+                os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+    n_ok = sum(r["status"] == "OK" for r in results)
+    n_skip = sum(r["status"] == "SKIP" for r in results)
+    n_fail = sum(r["status"] == "FAIL" for r in results)
+    print(f"done: {n_ok} OK, {n_skip} SKIP, {n_fail} FAIL -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

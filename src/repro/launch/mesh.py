@@ -1,0 +1,34 @@
+"""Production meshes.  Functions, not module constants — importing this
+module never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips single pod; 2x16x16 = 512 chips across 2 pods."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh helper for tests/examples (e.g. (4, 2) on 8 CPU
+    devices with xla_force_host_platform_device_count=8)."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def data_axes_of(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axis_size(mesh) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+
+
+def data_world_size(mesh) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    w = 1
+    for a in data_axes_of(mesh):
+        w *= sizes[a]
+    return w

@@ -1,0 +1,135 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.  The compiled module is the per-device SPMD program, so
+``cost_analysis()`` FLOPs/bytes and the parsed collective operand bytes are
+per-chip; the spec's ``X_global / (chips · rate)`` therefore reduces to
+``X_per_chip / rate``.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass
+from typing import Dict
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+LINK_BW = 50e9           # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|[\w\[\],{}]+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum of collective *operand* bytes per op type, parsed from the
+    (per-device) HLO.  all-gather operands are result/group_size;
+    reduce-scatter operands are result*group_size; the rest match their
+    results."""
+    out: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_txt, op, phase = m.group(1), m.group(2), m.group(3)
+        if phase == "-done":  # avoid double counting async pairs
+            continue
+        rb = _shape_bytes(shape_txt)
+        gsize = 1
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            gsize = len(gm.group(1).split(","))
+        else:
+            gm2 = _GROUPS_IOTA_RE.search(line)
+            if gm2:
+                gsize = int(gm2.group(2))
+        if op == "all-gather" and gsize:
+            b = rb / gsize
+        elif op == "reduce-scatter":
+            b = rb * gsize
+        else:
+            b = rb
+        out[op] = out.get(op, 0.0) + b
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+@dataclass
+class Roofline:
+    flops: float
+    bytes_accessed: float
+    coll_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    useful_ratio: float
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def roofline_terms(flops: float, bytes_accessed: float, coll_bytes: float,
+                   model_flops_per_chip: float) -> Roofline:
+    c = flops / PEAK_FLOPS
+    m = bytes_accessed / HBM_BW
+    n = coll_bytes / LINK_BW
+    dom = max(("compute", c), ("memory", m), ("collective", n),
+              key=lambda t: t[1])[0]
+    return Roofline(flops, bytes_accessed, coll_bytes, c, m, n, dom,
+                    model_flops_per_chip,
+                    model_flops_per_chip / flops if flops else 0.0)
+
+
+def model_flops(cfg, n_params: int, n_active: int, kind: str,
+                global_batch: int, seq_len: int) -> float:
+    """6·N·D for training, 2·N·D forward-only (global, all chips)."""
+    if kind == "train":
+        return 6.0 * n_active * global_batch * seq_len
+    if kind == "prefill":
+        return 2.0 * n_active * global_batch * seq_len
+    return 2.0 * n_active * global_batch  # decode: one token
+
+
+def active_params(params_shapes, cfg) -> tuple[int, int]:
+    """(total, active) param counts; routed-expert weights count at
+    experts_per_token/num_experts."""
+    import jax
+
+    total = 0
+    active = 0.0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params_shapes)[0]:
+        n = leaf.size
+        total += n
+        name = str(getattr(path[-1], "key", ""))
+        in_shared = any(getattr(e, "key", None) == "shared" for e in path)
+        if (name in ("w_gate", "w_up", "w_down") and leaf.ndim >= 3
+                and not in_shared and cfg.num_experts):
+            active += n * cfg.experts_per_token / cfg.num_experts
+        else:
+            active += n
+    return total, int(active)

@@ -1,0 +1,117 @@
+"""Training driver.
+
+Examples (CPU container — force host devices before jax import):
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --smoke \
+      --host-devices 8 --mesh 4x2 --compressor gaussiank --ratio 0.001 \
+      --steps 50 --batch 8 --seq 128
+
+  # production launch (real TPU pod; mesh resolved from the platform)
+  PYTHONPATH=src python -m repro.launch.train --arch phi3.5-moe-42b-a6.6b \
+      --mesh 16x16 --compressor gaussiank --steps 1000
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def parse_args(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke variant of the arch")
+    ap.add_argument("--compressor", default="gaussiank",
+                    help="none|topk|randk|gaussiank|gaussiank2|dgck|trimmedk")
+    ap.add_argument("--ratio", type=float, default=0.001)
+    ap.add_argument("--hierarchical", action="store_true")
+    ap.add_argument("--optimizer", default="sgd",
+                    choices=["sgd", "adamw"])
+    ap.add_argument("--lr", type=float, default=0.1)
+    ap.add_argument("--schedule", default="constant",
+                    choices=["constant", "cosine", "step"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--mesh", default="4x2",
+                    help="DxM or PxDxM, e.g. 4x2 or 2x2x2")
+    ap.add_argument("--host-devices", type=int, default=0,
+                    help="force N host CPU devices (testing)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--checkpoint", default="",
+                    help="path to save the final state (npz)")
+    ap.add_argument("--resume", default="")
+    return ap.parse_args(argv)
+
+
+def main(argv=None):
+    args = parse_args(argv)
+    if args.host_devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.host_devices}")
+
+    import jax
+
+    from repro.checkpoint import load_state, save_state
+    from repro.configs import get_config
+    from repro.data import batch_for
+    from repro.launch.mesh import (data_world_size, make_mesh,
+                                   model_axis_size)
+    from repro.models import init_params
+    from repro.optim import adamw, constant, cosine, sgd_momentum, step_decay
+    from repro.train import init_train_state, make_train_step
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+    dims = tuple(int(x) for x in args.mesh.split("x"))
+    axes = ("pod", "data", "model")[-len(dims):]
+    mesh = make_mesh(dims, axes)
+
+    opt = sgd_momentum(0.9) if args.optimizer == "sgd" else adamw()
+    lr_fn = {"constant": lambda: constant(args.lr),
+             "cosine": lambda: cosine(args.lr, args.steps),
+             "step": lambda: step_decay(args.lr, 0.1,
+                                        max(args.steps // 2, 1))}[
+        args.schedule]()
+
+    params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    state = init_train_state(
+        params, opt, workers=data_world_size(mesh),
+        model_size=model_axis_size(mesh),
+        with_residual=args.compressor not in ("none",),
+        hierarchical=args.hierarchical)
+    if args.resume:
+        state = load_state(args.resume, state)
+
+    step = make_train_step(cfg, mesh, opt, lr_fn,
+                           compressor=args.compressor, ratio=args.ratio,
+                           hierarchical=args.hierarchical,
+                           remat=not args.smoke, seed=args.seed)
+
+    print(f"arch={cfg.name} compressor={args.compressor} ratio={args.ratio} "
+          f"mesh={args.mesh} steps={args.steps}")
+    t0 = time.time()
+    for i in range(args.steps):
+        batch = batch_for(cfg, i, global_batch=args.batch, seq_len=args.seq,
+                          seed=args.seed)
+        state, m = step(state, batch)
+        if i % args.log_every == 0 or i == args.steps - 1:
+            comm = ""
+            if "comm_bits_sparse" in m:
+                r = float(m["comm_bits_sparse"]) / float(m["comm_bits_dense"])
+                comm = f" comm_frac={r:.4f}"
+            print(f"step {i:5d} loss={float(m['loss']):.4f} "
+                  f"lr={float(m['lr']):.4g}{comm} "
+                  f"({time.time() - t0:.1f}s)", flush=True)
+    if args.checkpoint:
+        save_state(args.checkpoint, state)
+        print(f"saved -> {args.checkpoint}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,9 @@
+"""Composable model definitions for the assigned architectures."""
+from repro.models.config import ModelConfig
+from repro.models.model import (
+    decode_step, forward, init_cache, init_params, loss_fn, param_count,
+    prefill,
+)
+
+__all__ = ["ModelConfig", "decode_step", "forward", "init_cache",
+           "init_params", "loss_fn", "param_count", "prefill"]

@@ -1,0 +1,38 @@
+"""FNN-3 — the paper's own feed-forward model (Table 1): three hidden
+fully-connected ReLU layers on MNIST-scale inputs.  Used by the
+paper-fidelity convergence benchmarks (Fig. 1/6 analogue)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_fnn(key, input_dim=784, hidden=(128, 96, 64), num_classes=10,
+             dtype=jnp.float32):
+    dims = (input_dim,) + tuple(hidden) + (num_classes,)
+    keys = jax.random.split(key, len(dims) - 1)
+    params = []
+    for k, din, dout in zip(keys, dims[:-1], dims[1:]):
+        # Xavier init (paper Table 1)
+        lim = jnp.sqrt(6.0 / (din + dout))
+        w = jax.random.uniform(k, (din, dout), dtype, -lim, lim)
+        params.append({"w": w, "b": jnp.zeros((dout,), dtype)})
+    return params
+
+
+def fnn_forward(params, x):
+    h = x
+    for i, p in enumerate(params):
+        h = h @ p["w"] + p["b"]
+        if i < len(params) - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def fnn_loss(params, batch):
+    logits = fnn_forward(params, batch["x"]).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, -1)
+    ll = jnp.take_along_axis(logp, batch["y"][:, None], -1)[:, 0]
+    loss = -jnp.mean(ll)
+    acc = jnp.mean((jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32))
+    return loss, {"loss": loss, "acc": acc}

@@ -1,0 +1,95 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch (TPU-native).
+
+Top-k routing per token; assignments are sorted by expert id, truncated at a
+per-expert capacity C = ceil(N * k / E * capacity_factor), gathered into an
+(E, C, d) buffer, processed by a single batched einsum against stacked expert
+weights, and combined back with router weights.  This is the standard
+pre-Megablox TPU formulation (GShard/Flaxformer style, sort variant) —
+dense (N, E, C) one-hot dispatch tensors would not fit HBM at our shapes.
+
+Includes shared experts (DeepSeek-MoE) and a load-balance auxiliary loss.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import _dense_init, init_mlp, mlp
+
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    D, F, E = cfg.d_model, cfg.expert_d_ff(), cfg.num_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _dense_init(ks[0], (D, E), dtype),
+        "w_gate": _dense_init(ks[1], (E, D, F), dtype),
+        "w_up": _dense_init(ks[2], (E, D, F), dtype),
+        "w_down": _dense_init(ks[3], (E, F, D), dtype),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = init_mlp(ks[4], D, F * cfg.num_shared_experts, dtype)
+    return p
+
+
+def capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    c = math.ceil(n_tokens * cfg.experts_per_token /
+                  max(cfg.num_experts, 1) * cfg.capacity_factor)
+    return max(8, -(-c // 8) * 8)  # round up to 8 for TPU tiling
+
+
+def moe_ffn(p, x, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, T, D) -> (out, aux_loss)."""
+    B, T, D = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    N = B * T
+    xt = x.reshape(N, D)
+
+    logits = (xt @ p["router"]).astype(jnp.float32)          # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, K)                     # (N, K)
+    gate = gate / jnp.maximum(jnp.sum(gate, -1, keepdims=True), 1e-9)
+
+    # ---- load-balance auxiliary loss (Switch-style) ----
+    me = jnp.mean(probs, axis=0)                             # (E,)
+    onehot_top1 = jax.nn.one_hot(eidx[:, 0], E)
+    ce = jnp.mean(onehot_top1, axis=0)
+    aux = cfg.router_aux_coef * E * jnp.sum(me * ce)
+
+    # ---- sort-based dispatch ----
+    C = capacity(N, cfg)
+    flat_e = eidx.reshape(-1)                                # (N*K,)
+    order = jnp.argsort(flat_e, stable=True)                 # token-major in ties
+    sorted_e = flat_e[order]
+    # position within expert = running index - segment start
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(E))    # (E,)
+    pos_in_e = jnp.arange(N * K) - seg_start[sorted_e]
+    keep = pos_in_e < C
+    slot = jnp.where(keep, sorted_e * C + pos_in_e, E * C)   # scratch slot
+    token_of = order // K                                    # source token
+
+    # gather tokens into (E*C, D) buffer
+    buf_tok = jnp.full((E * C + 1,), N, jnp.int32).at[slot].set(
+        token_of.astype(jnp.int32), mode="drop")[: E * C]
+    xpad = jnp.concatenate([xt, jnp.zeros((1, D), xt.dtype)], 0)
+    expert_in = xpad[buf_tok].reshape(E, C, D)
+
+    # batched expert MLP (single einsum per matrix, MXU friendly)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", expert_in, p["w_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", expert_in, p["w_up"])
+    eo = jnp.einsum("ecf,efd->ecd", h, p["w_down"])          # (E, C, D)
+
+    # combine back: scatter-add weighted expert outputs to tokens
+    flat_gate = gate.reshape(-1)[order]                      # aligned with slot
+    w = jnp.zeros((E * C + 1,), jnp.float32).at[slot].set(
+        flat_gate, mode="drop")[: E * C]
+    contrib = eo.reshape(E * C, D) * w[:, None].astype(eo.dtype)
+    out = jnp.zeros((N + 1, D), eo.dtype).at[buf_tok].add(contrib,
+                                                          mode="drop")[:N]
+
+    if cfg.num_shared_experts:
+        out = out + mlp(p["shared"], xt)
+    return out.reshape(B, T, D).astype(x.dtype), aux

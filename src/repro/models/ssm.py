@@ -1,0 +1,130 @@
+"""Mamba selective-SSM block (Gu & Dao 2023), as used by Jamba
+(arXiv:2403.19887) — chunked associative-scan implementation.
+
+TPU adaptation: the (B, T, d_inner, n) discretised-state tensor of the naive
+formulation does not fit VMEM/HBM at Jamba scale, so the time axis is
+processed in chunks of ``chunk``: a sequential ``lax.scan`` over chunks
+carries the SSM state; within a chunk a ``jax.lax.associative_scan``
+parallelises over time.  This bounds live memory to O(B·chunk·d_inner·n)
+while keeping the inner scan vectorised.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import _dense_init
+
+
+def init_mamba(key, cfg: ModelConfig, dtype):
+    D, di, n, W, dtr = (cfg.d_model, cfg.d_inner, cfg.ssm_state_dim,
+                        cfg.ssm_conv_width, cfg.dt_rank)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": _dense_init(ks[0], (D, 2 * di), dtype),
+        "conv_w": _dense_init(ks[1], (W, di), dtype, scale=1.0 / W),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": _dense_init(ks[2], (di, dtr + 2 * n), dtype),
+        "dt_proj": _dense_init(ks[3], (dtr, di), dtype),
+        "dt_bias": jnp.full((di,), -4.6, dtype),  # softplus^-1(0.01)
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32),
+                                  (di, 1))).astype(dtype),
+        "D": jnp.ones((di,), dtype),
+        "out_proj": _dense_init(ks[4], (di, D), dtype),
+    }
+
+
+def _causal_depthwise_conv(x, w, b):
+    """x: (B,T,di); w: (W,di) depthwise causal conv along T."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(W):
+        out = out + xp[:, i:i + x.shape[1], :] * w[i]
+    return out + b
+
+
+def _ssm_chunk(carry_h, inputs):
+    """One chunk of the selective scan.  carry_h: (B,di,n);
+    inputs: (dA, dBx, C) with time-major chunk axes."""
+    dA, dBx, Cm = inputs          # (T,B,di,n), (T,B,di,n), (T,B,n)
+
+    def combine(a, b):
+        a1, a2 = a
+        b1, b2 = b
+        return a1 * b1, a2 * b1 + b2
+
+    accA, acch = jax.lax.associative_scan(combine, (dA, dBx), axis=0)
+    h = accA * carry_h[None] + acch                     # (T,B,di,n)
+    y = jnp.einsum("tbdn,tbn->tbd", h, Cm)
+    return h[-1], y
+
+
+def mamba_forward(p, x, cfg: ModelConfig, *, chunk: int = 128):
+    """x: (B,T,D) -> (y, final_state (B,di,n), conv_tail (B,W-1,di))."""
+    B, T, D = x.shape
+    di, n = cfg.d_inner, cfg.ssm_state_dim
+    xz = x @ p["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)
+    conv_tail = xs[:, -(cfg.ssm_conv_width - 1):, :]
+    xs = jax.nn.silu(_causal_depthwise_conv(xs, p["conv_w"], p["conv_b"]))
+
+    bcdt = xs @ p["x_proj"]
+    dtr, Bm, Cm = jnp.split(bcdt, [cfg.dt_rank, cfg.dt_rank + n], axis=-1)
+    dt = jax.nn.softplus(dtr @ p["dt_proj"] + p["dt_bias"])   # (B,T,di)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))              # (di,n)
+
+    ch = min(chunk, T)
+    assert T % ch == 0, (T, ch)
+    nch = T // ch
+
+    def to_chunks(a):  # (B,T,...) -> (nch, ch, B, ...)
+        return jnp.moveaxis(a.reshape(B, nch, ch, *a.shape[2:]), 0, 2)
+
+    dt_c, xs_c = to_chunks(dt), to_chunks(xs)
+    B_c, C_c = to_chunks(Bm), to_chunks(Cm)
+
+    def step(h, inp):
+        dt_i, xs_i, B_i, C_i = inp                    # (ch,B,...)
+        # the selective scan runs in f32 (bf16 recurrences drift and the
+        # associative-scan combine requires uniform dtypes)
+        dA = jnp.exp(dt_i[..., None].astype(jnp.float32) * A)
+        dBx = ((dt_i * xs_i)[..., None] *
+               B_i[:, :, None, :]).astype(jnp.float32)
+        h, y = _ssm_chunk(h, (dA, dBx, C_i.astype(jnp.float32)))
+        return h, y
+
+    h0 = jnp.zeros((B, di, n), jnp.float32)
+    hT, ys = jax.lax.scan(step, h0, (dt_c, xs_c, B_c, C_c))
+    y = jnp.moveaxis(ys, 2, 0).reshape(B, T, di)      # (nch,ch,B,di)->(B,T,di)
+    y = (y + xs.astype(jnp.float32) * p["D"].astype(jnp.float32))
+    y = y.astype(x.dtype)
+    out = (y * jax.nn.silu(z)) @ p["out_proj"]
+    return out, hT, conv_tail
+
+
+def mamba_decode(p, x, ssm_state, conv_state, cfg: ModelConfig):
+    """Single-token decode.  x: (B,1,D); ssm_state: (B,di,n);
+    conv_state: (B,W,di) rolling buffer of pre-conv activations
+    (slot W-1 is the newest)."""
+    B = x.shape[0]
+    n = cfg.ssm_state_dim
+    xz = x[:, 0] @ p["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)                 # (B,di)
+    conv_state = jnp.concatenate([conv_state[:, 1:], xs[:, None]], axis=1)
+    xc = jnp.einsum("bwd,wd->bd", conv_state, p["conv_w"]) + p["conv_b"]
+    xc = jax.nn.silu(xc)
+
+    bcdt = xc @ p["x_proj"]
+    dtr, Bm, Cm = jnp.split(bcdt, [cfg.dt_rank, cfg.dt_rank + n], axis=-1)
+    dt = jax.nn.softplus(dtr @ p["dt_proj"] + p["dt_bias"])   # (B,di)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt[..., None].astype(jnp.float32) * A)   # (B,di,n)
+    dBx = ((dt * xc)[..., None] * Bm[:, None, :]).astype(jnp.float32)
+    h = dA * ssm_state + dBx
+    y = jnp.einsum("bdn,bn->bd", h, Cm.astype(jnp.float32))
+    y = (y + xc.astype(jnp.float32) * p["D"].astype(jnp.float32))
+    y = y.astype(x.dtype)
+    out = (y * jax.nn.silu(z)) @ p["out_proj"]
+    return out[:, None], h, conv_state

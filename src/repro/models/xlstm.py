@@ -1,0 +1,135 @@
+"""xLSTM blocks (Beck et al., arXiv:2405.04517): sLSTM (scalar memory,
+exponential gating with stabiliser state) and mLSTM (matrix memory,
+covariance update rule).  Sequential `lax.scan` over time carries the
+recurrent state — the honest formulation for sLSTM (whose hidden-to-gate
+recurrence is inherently serial); mLSTM reuses the same scan machinery
+(see EXPERIMENTS.md §Roofline for the serialisation consequences)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import _dense_init
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ModelConfig, dtype):
+    D, H, hd = cfg.d_model, cfg.num_heads, cfg.hd
+    ks = jax.random.split(key, 7)
+    return {
+        "wq": _dense_init(ks[0], (D, H * hd), dtype),
+        "wk": _dense_init(ks[1], (D, H * hd), dtype),
+        "wv": _dense_init(ks[2], (D, H * hd), dtype),
+        "wi": _dense_init(ks[3], (D, H), dtype),
+        "wf": _dense_init(ks[4], (D, H), dtype),
+        "wo_gate": _dense_init(ks[5], (D, H * hd), dtype),
+        "out_proj": _dense_init(ks[6], (H * hd, D), dtype),
+        "bi": jnp.zeros((H,), dtype),
+        "bf": jnp.full((H,), 3.0, dtype),   # forget-open init
+    }
+
+
+def mlstm_init_state(B, cfg: ModelConfig):
+    H, hd = cfg.num_heads, cfg.hd
+    return {
+        "C": jnp.zeros((B, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((B, H, hd), jnp.float32),
+        "m": jnp.zeros((B, H), jnp.float32),
+    }
+
+
+def _mlstm_step(state, qkvif):
+    q, k, v, it, ft = qkvif     # (B,H,hd)x3, (B,H)x2
+    C, n, m = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(ft + m, it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(ft + m - m_new)
+    C = f_p[..., None, None] * C + i_p[..., None, None] * (
+        v[..., :, None] * k[..., None, :])           # (B,H,hdv,hdk)
+    n = f_p[..., None] * n + i_p[..., None] * k
+    num = jnp.einsum("bhvk,bhk->bhv", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)), 1.0)
+    h = num / den[..., None]
+    return {"C": C, "n": n, "m": m_new}, h
+
+
+def mlstm_forward(p, x, cfg: ModelConfig, state=None):
+    B, T, D = x.shape
+    H, hd = cfg.num_heads, cfg.hd
+    if state is None:
+        state = mlstm_init_state(B, cfg)
+    sc = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32)).astype(x.dtype)
+    q = (x @ p["wq"]).reshape(B, T, H, hd) * sc
+    k = (x @ p["wk"]).reshape(B, T, H, hd) * sc
+    v = (x @ p["wv"]).reshape(B, T, H, hd)
+    it = (x @ p["wi"] + p["bi"]).astype(jnp.float32)
+    ft = (x @ p["wf"] + p["bf"]).astype(jnp.float32)
+
+    def step(s, inp):
+        return _mlstm_step(s, inp)
+
+    xs = tuple(jnp.moveaxis(a, 1, 0).astype(jnp.float32)
+               for a in (q, k, v)) + tuple(jnp.moveaxis(a, 1, 0)
+                                           for a in (it, ft))
+    state, hs = jax.lax.scan(step, state, xs)
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype).reshape(B, T, H * hd)
+    o = jax.nn.sigmoid(x @ p["wo_gate"])
+    return (o * h) @ p["out_proj"], state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg: ModelConfig, dtype):
+    D, H, hd = cfg.d_model, cfg.num_heads, cfg.hd
+    ks = jax.random.split(key, 9)
+    p = {"out_proj": _dense_init(ks[8], (H * hd, D), dtype)}
+    for i, g in enumerate(("i", "f", "z", "o")):
+        p[f"w{g}"] = _dense_init(ks[i], (D, H * hd), dtype)
+        p[f"r{g}"] = _dense_init(ks[4 + i], (H, hd, hd), dtype,
+                                 scale=1.0 / hd ** 0.5)
+        p[f"b{g}"] = (jnp.full((H * hd,), 3.0, dtype) if g == "f"
+                      else jnp.zeros((H * hd,), dtype))
+    return p
+
+
+def slstm_init_state(B, cfg: ModelConfig):
+    H, hd = cfg.num_heads, cfg.hd
+    z = jnp.zeros((B, H, hd), jnp.float32)
+    return {"h": z, "c": z, "n": z + 1.0, "m": jnp.zeros((B, H, hd), jnp.float32)}
+
+
+def slstm_forward(p, x, cfg: ModelConfig, state=None):
+    B, T, D = x.shape
+    H, hd = cfg.num_heads, cfg.hd
+    if state is None:
+        state = slstm_init_state(B, cfg)
+
+    pre = {g: (x @ p[f"w{g}"] + p[f"b{g}"]).reshape(B, T, H, hd)
+           .astype(jnp.float32) for g in ("i", "f", "z", "o")}
+
+    def step(s, inp):
+        pi, pf, pz, po = inp                        # (B,H,hd) each
+        rec = {g: jnp.einsum("bhk,hkj->bhj", s["h"], p[f"r{g}"])
+               .astype(jnp.float32) for g in ("i", "f", "z", "o")}
+        it = pi + rec["i"]
+        ft = pf + rec["f"]
+        zt = jnp.tanh(pz + rec["z"])
+        ot = jax.nn.sigmoid(po + rec["o"])
+        m_new = jnp.maximum(ft + s["m"], it)
+        i_p = jnp.exp(it - m_new)
+        f_p = jnp.exp(ft + s["m"] - m_new)
+        c = f_p * s["c"] + i_p * zt
+        n = f_p * s["n"] + i_p
+        h = ot * c / jnp.maximum(n, 1.0)
+        return {"h": h, "c": c, "n": n, "m": m_new}, h
+
+    xs = tuple(jnp.moveaxis(pre[g], 1, 0) for g in ("i", "f", "z", "o"))
+    state, hs = jax.lax.scan(step, state, xs)
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype).reshape(B, T, H * hd)
+    return h @ p["out_proj"], state

@@ -1,0 +1,5 @@
+from repro.optim.optimizers import Optimizer, adamw, sgd_momentum
+from repro.optim.schedules import constant, cosine, step_decay, warmup_cosine
+
+__all__ = ["Optimizer", "adamw", "sgd_momentum", "constant", "cosine",
+           "step_decay", "warmup_cosine"]

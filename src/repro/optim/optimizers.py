@@ -1,0 +1,65 @@
+"""Optimizers.  SGD with momentum 0.9 is the paper's setting (Table 1);
+AdamW is provided for the transformer configs.  Functional style:
+``init(params) -> state``; ``update(params, state, grads, lr) ->
+(new_params, new_state)``."""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    name: str
+    init: Callable
+    update: Callable
+
+
+def sgd_momentum(momentum: float = 0.9, weight_decay: float = 0.0,
+                 nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return {"m": jax.tree.map(jnp.zeros_like, params)}
+
+    def update(params, state, grads, lr):
+        if weight_decay:
+            grads = jax.tree.map(lambda g, p: g + weight_decay * p,
+                                 grads, params)
+        m = jax.tree.map(lambda m, g: momentum * m + g, state["m"], grads)
+        if nesterov:
+            step = jax.tree.map(lambda m, g: momentum * m + g, m, grads)
+        else:
+            step = m
+        new_params = jax.tree.map(lambda p, s: p - lr * s.astype(p.dtype),
+                                  params, step)
+        return new_params, {"m": m}
+
+    return Optimizer("sgd_momentum", init, update)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        return {"m": jax.tree.map(jnp.zeros_like, params),
+                "v": jax.tree.map(jnp.zeros_like, params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(params, state, grads, lr):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g,
+                         state["m"], grads)
+        v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                         state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(p, m, v):
+            mh = m / bc1
+            vh = v / bc2
+            return (p - lr * (mh / (jnp.sqrt(vh) + eps) + weight_decay * p)
+                    .astype(p.dtype))
+
+        return (jax.tree.map(upd, params, m, v),
+                {"m": m, "v": v, "t": t})
+
+    return Optimizer("adamw", init, update)

@@ -1,0 +1,32 @@
+"""Learning-rate schedules (step -> lr), jit-safe."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def step_decay(lr: float, decay: float = 0.1, every: int = 1000):
+    """The paper's CIFAR schedule shape: decay at fixed boundaries."""
+    return lambda step: jnp.float32(lr) * decay ** (step // every)
+
+
+def cosine(lr: float, total_steps: int, min_frac: float = 0.1):
+    def f(step):
+        t = jnp.clip(step / total_steps, 0.0, 1.0)
+        return jnp.float32(lr) * (min_frac + (1 - min_frac) *
+                                  0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return f
+
+
+def warmup_cosine(lr: float, warmup: int, total_steps: int,
+                  min_frac: float = 0.1):
+    base = cosine(lr, max(total_steps - warmup, 1), min_frac)
+
+    def f(step):
+        w = jnp.clip(step / max(warmup, 1), 0.0, 1.0)
+        return jnp.where(step < warmup, jnp.float32(lr) * w,
+                         base(step - warmup))
+    return f

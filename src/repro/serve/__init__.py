@@ -1,0 +1,5 @@
+from repro.serve.steps import (decode_shardings, make_decode_step,
+                               make_prefill_step, serve_param_specs)
+
+__all__ = ["decode_shardings", "make_decode_step", "make_prefill_step",
+           "serve_param_specs"]

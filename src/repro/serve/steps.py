@@ -1,0 +1,128 @@
+"""Serve-step factories: jitted prefill and decode with explicit shardings.
+
+Serving has no gradient aggregation, so params may shard over BOTH mesh
+axes (``serve_param_specs``: model rule + the joint data axes on another
+divisible dim — ZeRO-3-style weight gathering chosen by GSPMD).  That is
+what lets the 398B/34B configs fit per-device HBM at serve time."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist import sharding as shd
+from repro.dist.sharding import param_spec
+from repro.launch.mesh import data_axes_of, data_world_size, model_axis_size
+from repro.models import decode_step, init_cache, init_params, prefill
+from repro.models.config import ModelConfig
+
+
+def serve_param_specs(params, mesh, mode: str = "2d"):
+    """Param sharding for serving.
+
+    mode="2d": model axis per the train rules + the joint data axes on the
+    largest remaining divisible dim (ZeRO-3-ish at-rest sharding; GSPMD may
+    choose partial-dot + activation all-reduce to consume it).
+    mode="model-only": shard over the model axis only, replicate over data
+    (no data-axis collectives on the forward path; needs the weights to fit
+    HBM/model_size)."""
+    data_axes = data_axes_of(mesh)
+    dsize = data_world_size(mesh)
+    msize = model_axis_size(mesh)
+    joint = data_axes if len(data_axes) > 1 else data_axes[0]
+
+    def spec_of(path, leaf):
+        base = shd.param_spec(path, leaf, "model", msize)
+        spec = list(base) + [None] * (leaf.ndim - len(base))
+        if mode == "2d":
+            dims = sorted(range(leaf.ndim),
+                          key=lambda d: -leaf.shape[d])
+            for d in dims:
+                if spec[d] is None and leaf.shape[d] % dsize == 0 and \
+                        leaf.shape[d] >= dsize:
+                    spec[d] = joint
+                    break
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(spec_of, params)
+
+
+def _named(mesh, specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def serve_constrain(mesh):
+    """Per-layer param constraint applied inside the model's scan bodies —
+    sharding does not propagate into while-loop bodies for stacked leaves,
+    so the sliced params are pinned explicitly (same trick as training)."""
+    msize = model_axis_size(mesh)
+
+    def constrain(tree):
+        return jax.tree_util.tree_map_with_path(
+            lambda path, leaf: jax.lax.with_sharding_constraint(
+                leaf, NamedSharding(
+                    mesh, param_spec(path, leaf, "model", msize))),
+            tree)
+
+    return constrain
+
+
+def make_prefill_step(cfg: ModelConfig, mesh, *, s_max: Optional[int] = None,
+                      cache_dtype=None):
+    """Returns jitted ``prefill_step(params, prompt) -> (logits, cache)``.
+    ``prompt`` = tokens (B,S) or embeds (B,S,D)."""
+    data_axes = data_axes_of(mesh)
+    joint = data_axes if len(data_axes) > 1 else data_axes[0]
+    constrain = serve_constrain(mesh)
+
+    def fn(params, prompt):
+        kw = ({"embeds": prompt} if cfg.frontend == "embeds"
+              else {"tokens": prompt})
+        logits, cache, _ = prefill(params, cfg, s_max=s_max,
+                                   cache_dtype=cache_dtype,
+                                   constrain=constrain, **kw)
+        return logits, cache
+
+    def jitted(params, prompt):
+        pspecs = serve_param_specs(params, mesh)
+        in_sh = (_named(mesh, pspecs),
+                 NamedSharding(mesh, P(joint)))
+        return jax.jit(fn, in_shardings=in_sh)(params, prompt)
+
+    jitted.fn = fn
+    return jitted
+
+
+def make_decode_step(cfg: ModelConfig, mesh):
+    """Returns jitted ``step(params, cache, pos, token_or_embed) ->
+    (logits, cache)`` for one-token decode against a KV/SSM cache."""
+    constrain = serve_constrain(mesh)
+
+    def fn(params, cache, pos, tok):
+        kw = ({"embeds": tok} if cfg.frontend == "embeds" and tok.ndim == 3
+              else {"tokens": tok})
+        return decode_step(params, cfg, cache, pos, constrain=constrain, **kw)
+
+    return fn
+
+
+def decode_shardings(cfg: ModelConfig, mesh, batch: int, s_max: int,
+                     cache_dtype=None):
+    """(param_shardings, cache_shardings, token_sharding) for decode."""
+    data_axes = data_axes_of(mesh)
+    dsize = data_world_size(mesh)
+    msize = model_axis_size(mesh)
+    joint = data_axes if len(data_axes) > 1 else data_axes[0]
+
+    pshapes = jax.eval_shape(
+        functools.partial(init_params, cfg), jax.random.PRNGKey(0))
+    pspecs = serve_param_specs(pshapes, mesh)
+    cshapes = jax.eval_shape(
+        functools.partial(init_cache, cfg, batch, s_max, cache_dtype))
+    cspecs = shd.cache_specs(cshapes, data_axes, dsize, "model", msize)
+    tok_spec = P(joint) if batch % dsize == 0 and batch >= dsize else P()
+    return pspecs, cspecs, tok_spec

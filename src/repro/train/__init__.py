@@ -1,0 +1,4 @@
+from repro.train.state import init_train_state
+from repro.train.step import make_train_step
+
+__all__ = ["init_train_state", "make_train_step"]

@@ -1,0 +1,53 @@
+"""Momentum correction (Lin et al. 2018, §3.1 of DGC) — the optimisation
+trick the paper (§4.4) names as the fix for TopK/GaussianK-SGD's residual
+staleness and its 0.6–0.8% accuracy gap vs Dense-SGD.
+
+Vanilla sparsified SGD applies momentum AFTER aggregation, so the momentum
+state only sees the sparse average and the residuals go stale.  Momentum
+correction moves the momentum accumulation BEFORE compression, per worker:
+
+    v_t^p = mu * v_{t-1}^p + g_t^p            (local momentum)
+    u_t^p = u_{t-1}^p + v_t^p                 (local velocity accumulation)
+    exchange Comp_k(u_t^p); selected coordinates are ZEROED in both
+    v and u (they have been applied), unselected keep accumulating.
+
+The server-side update is then plain (momentum-free) SGD on the aggregated
+sparse tensor.  This module provides the per-worker state transform used
+by the train step when ``momentum_correction=True``.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import codec
+from repro.core.compressors import CompressorSpec
+
+
+def mc_compress_leaf(g_flat: jax.Array, v_flat: jax.Array,
+                     u_flat: jax.Array, spec: CompressorSpec, k: int,
+                     momentum: float, key) -> Tuple[jax.Array, jax.Array,
+                                                    jax.Array, jax.Array]:
+    """One leaf of momentum-corrected compression (flat views).
+
+    Returns (values, indices, new_v, new_u)."""
+    d = g_flat.shape[0]
+    v = momentum * v_flat + g_flat
+    u = u_flat + v
+    vals, idx = spec.select(u, k, key)
+    mask = codec.decode(jnp.ones_like(vals), idx, d)
+    keep = 1.0 - jnp.clip(mask, 0.0, 1.0)
+    return vals, idx, (v * keep).astype(v_flat.dtype), \
+        (u * keep).astype(u_flat.dtype)
+
+
+def init_mc_state(params, model_size: int, dtype=jnp.float32):
+    """(v, u) zero states, flat-padded like the EF residuals."""
+    def z(p):
+        d_pad = -(-p.size // model_size) * model_size
+        return jnp.zeros((d_pad,), dtype)
+    v = jax.tree.map(z, params)
+    u = jax.tree.map(z, params)
+    return v, u

@@ -1,0 +1,41 @@
+"""Train state: params + optimizer state + per-worker error-feedback
+residuals (paper Eq. 2 requires one residual vector per data-parallel
+worker; they live flat-padded with a leading worker axis, sharded
+(workers -> data axes, flat dim -> model))."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.aggregate import init_residuals
+from repro.optim import Optimizer
+
+
+def init_train_state(params, optimizer: Optimizer, *, workers: int,
+                     model_size: int, with_residual: bool = True,
+                     hierarchical: bool = False,
+                     resid_dtype=jnp.float32) -> Dict[str, Any]:
+    state: Dict[str, Any] = {
+        "params": params,
+        "opt": optimizer.init(params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if with_residual:
+        one = init_residuals(params, model_size, resid_dtype)
+        state["resid"] = jax.tree.map(
+            lambda e: jnp.zeros((workers,) + e.shape, e.dtype), one)
+        if hierarchical:
+            state["resid2"] = jax.tree.map(
+                lambda e: jnp.zeros((workers,) + e.shape, e.dtype), one)
+    return state
+
+
+def abstract_train_state(cfg, init_params_fn, optimizer: Optimizer,
+                         **kw):
+    """ShapeDtypeStruct version (for dry-run lowering, no allocation)."""
+    def build(key):
+        params = init_params_fn(key)
+        return init_train_state(params, optimizer, **kw)
+    return jax.eval_shape(build, jax.random.PRNGKey(0))

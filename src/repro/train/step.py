@@ -1,0 +1,140 @@
+"""Train-step factory: wires the model loss, the compressed gradient
+aggregation (paper Eq. 2) and the optimizer into one jitted step.
+
+Structure (DESIGN.md §4):
+
+  jax.jit
+   └─ jax.shard_map        manual over ("pod","data"), AUTO over "model"
+       ├─ jax.value_and_grad(loss)   per-worker grads on the local batch;
+       │                             params/activations GSPMD-sharded
+       │                             over "model" transparently
+       ├─ aggregate_compressed       local per-shard selection + sparse
+       │                             all_gather over the data axes
+       │                             (or lax.pmean for Dense-SGD)
+       └─ optimizer.update           identical on every worker
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.compressors import get_compressor
+from repro.dist import aggregate
+from repro.dist.sharding import param_spec
+from repro.launch.mesh import data_axes_of, data_world_size, model_axis_size
+from repro.models import loss_fn as model_loss_fn
+from repro.optim import Optimizer
+
+
+def constrain_params(params, model_axis: str, msize: int):
+    """Pin the model-axis sharding of every param leaf inside the
+    partial-manual region — input shardings on auto axes do not survive
+    the shard_map boundary, and without this the whole model computes
+    replicated over ``model``."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: jax.lax.with_sharding_constraint(
+            leaf, param_spec(path, leaf, model_axis, msize)),
+        params)
+
+
+def _joint(data_axes):
+    return data_axes if len(data_axes) > 1 else data_axes[0]
+
+
+def worker_index(data_axes):
+    idx = jnp.int32(0)
+    for a in data_axes:
+        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+    return idx
+
+
+def make_train_step(cfg, mesh, optimizer: Optimizer, lr_fn: Callable,
+                    *, compressor: Optional[str] = "gaussiank",
+                    ratio: float = 0.001, hierarchical: bool = False,
+                    remat: bool = True, seed: int = 0,
+                    loss_fn: Optional[Callable] = None, codec_dtype=None,
+                    momentum_correction: float = 0.0):
+    """Returns (step_fn, in_specs, out_specs).  ``step_fn(state, batch) ->
+    (state, metrics)`` is already jit+shard_map wrapped for ``mesh``.
+    ``compressor=None``/"none" gives the Dense-SGD baseline."""
+    data_axes = data_axes_of(mesh)
+    joint = _joint(data_axes)
+    msize = model_axis_size(mesh)
+    dense = compressor in (None, "none")
+    spec = None if dense else get_compressor(compressor)
+    base_key = jax.random.PRNGKey(seed)
+    constrain = lambda tree: constrain_params(tree, "model", msize)  # noqa: E731
+    loss = loss_fn or (lambda p, b: model_loss_fn(p, cfg, b, remat=remat,
+                                                  constrain=constrain))
+
+    def per_worker_step(state, batch):
+        params = constrain_params(state["params"], "model", msize)
+        (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(
+            params, batch)
+        grads = constrain_params(grads, "model", msize)
+
+        if dense:
+            agg = aggregate.aggregate_dense(grads, data_axes)
+            new_resid = state.get("resid")
+            new_resid2 = state.get("resid2")
+            agg_metrics = {}
+        else:
+            resid = jax.tree.map(lambda e: e[0], state["resid"])
+            resid2 = (jax.tree.map(lambda e: e[0], state["resid2"])
+                      if "resid2" in state else None)
+            key = jax.random.fold_in(base_key, state["step"])
+            key = jax.random.fold_in(key, worker_index(data_axes))
+            agg, nr, nr2, agg_metrics = aggregate.aggregate_compressed(
+                grads, resid, spec, ratio, data_axes, "model", msize, key,
+                hierarchical=hierarchical, resid2=resid2,
+                world=data_world_size(mesh), codec_dtype=codec_dtype,
+                momentum_correction=momentum_correction)
+            new_resid = jax.tree.map(lambda e: e[None], nr)
+            new_resid2 = (jax.tree.map(lambda e: e[None], nr2)
+                          if "resid2" in state else None)
+
+        lr = lr_fn(state["step"])
+        agg = constrain_params(agg, "model", msize)
+        new_params, new_opt = optimizer.update(params, state["opt"], agg, lr)
+        new_params = constrain_params(new_params, "model", msize)
+        new_state = dict(state, params=new_params, opt=new_opt,
+                         step=state["step"] + 1)
+        if new_resid is not None and "resid" in state:
+            new_state["resid"] = new_resid
+        if new_resid2 is not None and "resid2" in state:
+            new_state["resid2"] = new_resid2
+
+        metrics = {k: jax.lax.pmean(v, joint) for k, v in metrics.items()}
+        metrics["lr"] = lr
+        metrics.update(agg_metrics)
+        return new_state, metrics
+
+    def state_specs(state):
+        def of(path, leaf):
+            top = str(getattr(path[0], "key", ""))
+            if top in ("resid", "resid2"):
+                return P(joint)
+            return P()
+        return jax.tree_util.tree_map_with_path(of, state)
+
+    def batch_specs(batch):
+        return jax.tree.map(lambda _: P(joint), batch)
+
+    @jax.jit
+    def step_fn(state, batch):
+        sm = jax.shard_map(
+            per_worker_step, mesh=mesh,
+            in_specs=(state_specs(state), batch_specs(batch)),
+            out_specs=(state_specs(state), P()),
+            axis_names=set(data_axes), check_vma=False)
+        return sm(state, batch)
+
+    return step_fn
+
+
+def required_workers(mesh) -> int:
+    return data_world_size(mesh)

@@ -1,0 +1,155 @@
+"""Subprocess body for tests/test_distributed.py (8 host devices)."""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import codec, get_compressor
+from repro.launch.mesh import data_world_size, make_mesh, model_axis_size
+from repro.models import ModelConfig, init_params, loss_fn
+from repro.optim import constant, sgd_momentum
+from repro.train import init_train_state, make_train_step
+
+CFG = ModelConfig(name="t", arch_type="dense", num_layers=2, d_model=64,
+                  num_heads=4, num_kv_heads=2, d_ff=128,
+                  vocab_size=64).validate()
+
+
+def _batch(seed=1, B=8, S=16):
+    toks = jax.random.randint(jax.random.PRNGKey(seed), (B, S), 0,
+                              CFG.vocab_size)
+    return {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+
+
+def check_eq2():
+    """Distributed TopK-SGD on a (4,2) mesh must match a single-process
+    simulation of Eq. (2): per-worker local top-k over each model-shard row,
+    all-gather, average, SGD-momentum update."""
+    mesh = make_mesh((4, 2), ("data", "model"))
+    W = data_world_size(mesh)
+    msize = model_axis_size(mesh)
+    opt = sgd_momentum(0.9)
+    ratio, lr, steps = 0.02, 0.05, 3
+
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    state = init_train_state(params, opt, workers=W, model_size=msize)
+    step = make_train_step(CFG, mesh, opt, constant(lr), compressor="topk",
+                           ratio=ratio, remat=False)
+    batch = _batch()
+    for _ in range(steps):
+        state, m = step(state, batch)
+
+    # ---- single-process simulation ----
+    import math
+    spec = get_compressor("topk")
+    p_sim = jax.tree.map(jnp.asarray, params)
+    mom = jax.tree.map(jnp.zeros_like, params)
+    resid = jax.tree.map(
+        lambda p: jnp.zeros((W, -(-p.size // msize) * msize)), params)
+    grad_fn = jax.jit(jax.grad(
+        lambda p, b: loss_fn(p, CFG, b, remat=False)[0]))
+    for _ in range(steps):
+        # per-worker grads on batch shards
+        worker_grads = []
+        for w in range(W):
+            shard = jax.tree.map(lambda x: x[w * 2:(w + 1) * 2], batch)
+            worker_grads.append(grad_fn(p_sim, shard))
+        # compressed aggregation per leaf
+        leaves, treedef = jax.tree.flatten(p_sim)
+        g_leaves = [treedef.flatten_up_to(g) for g in worker_grads]
+        e_leaves = treedef.flatten_up_to(resid)
+        agg, new_e = [], []
+        for li in range(len(leaves)):
+            d = leaves[li].size
+            d_pad = -(-d // msize) * msize
+            d_row = d_pad // msize
+            k = max(1, math.ceil(ratio * d))
+            k_row = max(1, -(-k // msize))
+            dense = jnp.zeros((d_pad,))
+            e_new_rows = []
+            for w in range(W):
+                u = e_leaves[li][w] + jnp.pad(
+                    g_leaves[w][li].reshape(-1), (0, d_pad - d))
+                u2 = u.reshape(msize, d_row)
+                rows_dense, rows_e = [], []
+                for r in range(msize):
+                    v, i = spec.select(u2[r], k_row, None)
+                    dec = codec.decode(v, i, d_row)
+                    rows_dense.append(dec)
+                    rows_e.append(u2[r] - dec)
+                dense = dense + jnp.stack(rows_dense).reshape(-1)
+                e_new_rows.append(jnp.stack(rows_e).reshape(-1))
+            agg.append((dense / W)[:d].reshape(leaves[li].shape))
+            new_e.append(jnp.stack(e_new_rows))
+        agg = treedef.unflatten(agg)
+        resid = treedef.unflatten(new_e)
+        mom = jax.tree.map(lambda m, g: 0.9 * m + g, mom, agg)
+        p_sim = jax.tree.map(lambda p, m: p - lr * m, p_sim, mom)
+
+    err = max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))),
+        state["params"], p_sim)))
+    assert err < 2e-5, f"max param deviation {err}"
+    print("EQ2 OK", err)
+
+
+def check_dense():
+    """Dense-SGD on the mesh == single-device full-batch SGD."""
+    mesh = make_mesh((4, 2), ("data", "model"))
+    opt = sgd_momentum(0.9)
+    lr, steps = 0.05, 3
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    state = init_train_state(params, opt, workers=8, model_size=2,
+                             with_residual=False)
+    step = make_train_step(CFG, mesh, opt, constant(lr), compressor="none",
+                           remat=False)
+    batch = _batch()
+    for _ in range(steps):
+        state, m = step(state, batch)
+
+    p_sim = params
+    mom = jax.tree.map(jnp.zeros_like, params)
+    # mean over 4 data shards of per-shard mean loss == overall mean,
+    # since shards are equal sized
+    grad_fn = jax.jit(jax.grad(
+        lambda p, b: loss_fn(p, CFG, b, remat=False)[0]))
+    for _ in range(steps):
+        gs = [grad_fn(p_sim, jax.tree.map(lambda x: x[w * 2:(w + 1) * 2],
+                                          batch)) for w in range(4)]
+        g = jax.tree.map(lambda *x: sum(x) / 4, *gs)
+        mom = jax.tree.map(lambda m, g: 0.9 * m + g, mom, g)
+        p_sim = jax.tree.map(lambda p, m: p - lr * m, p_sim, mom)
+    err = max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))),
+        state["params"], p_sim)))
+    assert err < 2e-5, f"max param deviation {err}"
+    print("DENSE OK", err)
+
+
+def check_multipod():
+    """Every compressor trains (loss decreases) on the 2x2x2 pod mesh,
+    flat and hierarchical."""
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+    opt = sgd_momentum(0.9)
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    batch = _batch()
+    for comp in ("topk", "randk", "gaussiank", "dgck", "trimmedk"):
+        for hier in ((False, True) if comp == "gaussiank" else (False,)):
+            state = init_train_state(params, opt, workers=4, model_size=2,
+                                     hierarchical=hier)
+            step = make_train_step(CFG, mesh, opt, constant(0.05),
+                                   compressor=comp, ratio=0.02, remat=False,
+                                   hierarchical=hier)
+            losses = []
+            for _ in range(6):
+                state, m = step(state, batch)
+                losses.append(float(m["loss"]))
+            assert losses[-1] < losses[0], (comp, hier, losses)
+            assert np.isfinite(losses).all()
+    print("MULTIPOD OK")
+
+
+if __name__ == "__main__":
+    {"eq2": check_eq2, "dense": check_dense,
+     "multipod": check_multipod}[sys.argv[1]]()

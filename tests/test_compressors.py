@@ -1,0 +1,133 @@
+"""Compressor-zoo unit + property tests (paper §1 Eq. 2-4, §3.3 Alg. 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (SENTINEL, bounds, codec, compress_with_ef,
+                        compressors, decode, get_compressor, nnz)
+
+ALL = compressors.available()
+
+
+def _u(seed, d, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(seed), (d,))
+
+
+@pytest.mark.parametrize("name", ALL)
+@pytest.mark.parametrize("d,k", [(1000, 10), (4096, 64), (333, 5)])
+def test_error_feedback_conservation(name, d, k):
+    """decode(comp(u)) + residual == u exactly (Eq. 2 invariant)."""
+    spec = get_compressor(name)
+    u = _u(0, d, 0.01)
+    v, i, r = compress_with_ef(u, spec, k, jax.random.PRNGKey(1))
+    np.testing.assert_allclose(np.asarray(decode(v, i, d) + r),
+                               np.asarray(u), rtol=1e-6, atol=1e-8)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_values_match_indices(name):
+    """Every encoded (value, index) pair satisfies values == u[idx]."""
+    spec = get_compressor(name)
+    u = _u(2, 2048)
+    v, i = spec.select(u, 32, jax.random.PRNGKey(3))
+    v, i = np.asarray(v), np.asarray(i)
+    real = i != SENTINEL
+    np.testing.assert_allclose(v[real], np.asarray(u)[i[real]], rtol=1e-6)
+    assert np.all(v[~real] == 0)
+    # indices unique among real entries
+    assert len(set(i[real].tolist())) == real.sum()
+
+
+def test_topk_exactness():
+    u = _u(4, 1024)
+    v, i = compressors.topk_select(u, 16)
+    top_abs = np.sort(np.abs(np.asarray(u)))[-16:]
+    np.testing.assert_allclose(np.sort(np.abs(np.asarray(v))), top_abs,
+                               rtol=1e-6)
+
+
+def test_topk_contraction_better_than_randk():
+    """||u - Top_k(u)||^2 <= ||u - Rand_k(u)||^2 (paper Eq. 4)."""
+    u = _u(5, 8192)
+    for name, key in (("topk", None), ("randk", jax.random.PRNGKey(0))):
+        spec = get_compressor(name)
+        v, i = spec.select(u, 128, key)
+        err = float(jnp.sum((u - decode(v, i, u.shape[0])) ** 2))
+        if name == "topk":
+            topk_err = err
+        else:
+            assert topk_err <= err
+
+
+def test_gaussiank_accept_band():
+    """Algorithm 1 keeps the selected count near k (band [2k/3, 4k/3])
+    for Gaussian u with the two-sided correction."""
+    u = _u(6, 100_000, 0.03)
+    k = 500
+    v, i = compressors.gaussiank_select(u, k, two_sided=True)
+    c = int(nnz(i))
+    assert 2 * k / 3 <= c <= 4 * k / 3 + 1, c
+
+
+def test_gaussiank_cap():
+    assert compressors.gaussiank_cap(99, 10_000) == 132
+    assert compressors.gaussiank_cap(10_000, 10_000) == 10_000
+
+
+def test_compact_by_mask_order_and_overflow():
+    u = jnp.arange(10.0)
+    mask = u % 2 == 1  # 5 elements
+    v, i = codec.compact_by_mask(u, mask, 3)
+    np.testing.assert_array_equal(np.asarray(i), [1, 3, 5])  # index order
+    np.testing.assert_array_equal(np.asarray(v), [1, 3, 5])
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(10, 2000),
+       st.integers(1, 50))
+def test_property_ef_conservation_gaussiank(seed, d, k):
+    k = min(k, d)
+    u = _u(seed % 1000, d, 0.1)
+    spec = get_compressor("gaussiank")
+    v, i, r = compress_with_ef(u, spec, k)
+    np.testing.assert_allclose(np.asarray(decode(v, i, d) + r),
+                               np.asarray(u), rtol=1e-5, atol=1e-7)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(32, 4000),
+       st.integers(1, 100))
+def test_property_topk_bound_classic(seed, d, k):
+    """||u - Top_k(u)||^2 <= (1 - k/d) ||u||^2 holds unconditionally."""
+    k = min(k, d)
+    u = _u(seed % 997, d)
+    g = float(bounds.gamma_exact(u, k))
+    assert g <= bounds.bound_classic(k, d) + 1e-6
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_property_paper_bound_gaussian(seed):
+    """Theorem 1: for bell-shaped u, exact gamma <= (1-k/d)^2."""
+    d, k = 20_000, 200
+    u = _u(seed % 991, d)
+    g = float(bounds.gamma_exact(u, k))
+    assert g <= bounds.bound_paper(k, d) + 1e-6
+
+
+def test_codec_roundtrip_sentinel():
+    v = jnp.array([1.0, 2.0, 0.0])
+    i = jnp.array([5, 2, SENTINEL], jnp.int32)
+    dense = decode(v, i, 8)
+    np.testing.assert_array_equal(np.asarray(dense),
+                                  [0, 0, 2, 0, 0, 1, 0, 0])
+    assert int(nnz(i)) == 2
+
+
+def test_decode_add():
+    v = jnp.array([1.0, 2.0])
+    i = jnp.array([1, 1], jnp.int32)  # duplicate -> adds
+    out = codec.decode_add(jnp.zeros(4), v, i)
+    np.testing.assert_array_equal(np.asarray(out), [0, 3, 0, 0])

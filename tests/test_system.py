@@ -1,0 +1,127 @@
+"""End-to-end behaviour tests for the system on a single device
+(1x1 mesh): training loop, checkpointing, data determinism, sharding
+rules, input specs, schedules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.checkpoint import load_state, save_state
+from repro.configs import ARCHS, INPUT_SHAPES, applicable, input_specs
+from repro.data import lm_batch, mnist_like
+from repro.dist.sharding import param_specs
+from repro.launch.mesh import make_mesh
+from repro.models import ModelConfig, init_params
+from repro.models.fnn import fnn_loss, init_fnn
+from repro.optim import constant, sgd_momentum, warmup_cosine
+from repro.train import init_train_state, make_train_step
+
+CFG = ModelConfig(name="sys", arch_type="dense", num_layers=2, d_model=64,
+                  num_heads=4, num_kv_heads=2, d_ff=128,
+                  vocab_size=64).validate()
+
+
+def test_single_device_training_all_compressors():
+    mesh = make_mesh((1, 1), ("data", "model"))
+    opt = sgd_momentum(0.9)
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    batch = lm_batch(0, global_batch=4, seq_len=16, vocab=CFG.vocab_size)
+    for comp in ("none", "topk", "gaussiank", "gaussiank2", "dgck",
+                 "trimmedk", "randk"):
+        state = init_train_state(params, opt, workers=1, model_size=1,
+                                 with_residual=comp != "none")
+        step = make_train_step(CFG, mesh, opt, constant(0.1),
+                               compressor=comp, ratio=0.01, remat=False)
+        losses = []
+        for i in range(5):
+            state, m = step(state, batch)
+            losses.append(float(m["loss"]))
+        assert np.isfinite(losses).all(), comp
+        assert losses[-1] < losses[0], (comp, losses)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    mesh = make_mesh((1, 1), ("data", "model"))
+    opt = sgd_momentum(0.9)
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    state = init_train_state(params, opt, workers=1, model_size=1)
+    step = make_train_step(CFG, mesh, opt, constant(0.1),
+                           compressor="gaussiank", ratio=0.01, remat=False)
+    batch = lm_batch(0, global_batch=4, seq_len=16, vocab=CFG.vocab_size)
+    state, _ = step(state, batch)
+    path = str(tmp_path / "ck.npz")
+    save_state(path, state)
+    restored = load_state(path, state)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # resumed training is identical to continued training
+    s1, _ = step(state, batch)
+    s2, _ = step(restored, batch)
+    for a, b in zip(jax.tree.leaves(s1["params"]),
+                    jax.tree.leaves(s2["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_data_determinism():
+    b1 = lm_batch(7, global_batch=4, seq_len=32, vocab=100, seed=3)
+    b2 = lm_batch(7, global_batch=4, seq_len=32, vocab=100, seed=3)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    b3 = lm_batch(8, global_batch=4, seq_len=32, vocab=100, seed=3)
+    assert not np.array_equal(np.asarray(b1["tokens"]),
+                              np.asarray(b3["tokens"]))
+    assert (np.asarray(b1["tokens"]) < 100).all()
+    assert b1["tokens"].shape == b1["labels"].shape == (4, 32)
+
+
+def test_fnn_paper_model_trains():
+    params = init_fnn(jax.random.PRNGKey(0))
+    opt = sgd_momentum(0.9)
+    st = opt.init(params)
+    loss_g = jax.jit(jax.value_and_grad(
+        lambda p, b: fnn_loss(p, b)[0]))
+    losses = []
+    for i in range(30):
+        batch = mnist_like(i, batch=64)
+        l, g = loss_g(params, batch)
+        params, st = opt.update(params, st, g, jnp.float32(0.05))
+        losses.append(float(l))
+    assert losses[-1] < 0.5 * losses[0], losses[-1]
+
+
+def test_param_specs_divisibility_guard():
+    cfg = ARCHS["xlstm-125m"].reduced()
+    params = jax.eval_shape(lambda k: init_params(cfg, k),
+                            jax.random.PRNGKey(0))
+    specs = param_specs(params, "model", 16)
+    flat_p = jax.tree_util.tree_flatten_with_path(params)[0]
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_p) == len(flat_s)
+    for (path, leaf), spec in zip(flat_p, flat_s):
+        for d, ax in enumerate(spec):
+            if ax is not None:
+                assert leaf.shape[d] % 16 == 0, (path, leaf.shape, spec)
+
+
+def test_input_specs_cover_all_archs_and_shapes():
+    for name, cfg in ARCHS.items():
+        for sh in INPUT_SHAPES.values():
+            ok, why = applicable(cfg, sh)
+            if not ok:
+                assert sh.name == "long_500k" and why
+                continue
+            specs = input_specs(cfg, sh)
+            assert all(isinstance(v, jax.ShapeDtypeStruct)
+                       for v in specs.values()), (name, sh.name)
+            if sh.kind == "train":
+                main = specs.get("tokens", specs.get("embeds"))
+                assert main.shape[0] == sh.global_batch
+                assert main.shape[1] == sh.seq_len
+
+
+def test_warmup_cosine_schedule():
+    f = warmup_cosine(1.0, warmup=10, total_steps=100)
+    assert float(f(0)) == 0.0
+    assert abs(float(f(10)) - 1.0) < 1e-6
+    assert float(f(99)) < 0.3
