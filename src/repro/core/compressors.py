@@ -120,6 +120,17 @@ def gaussiank_cap(k: int, d: int) -> int:
 # DGC-k (hierarchical sampling, Lin et al. 2018)
 # ---------------------------------------------------------------------------
 
+def _strided_sample(key, d: int, s: int) -> jax.Array:
+    """``s`` distinct indices in ``[0, d)``: a random-phase systematic
+    sample.  Drawing with replacement (``jax.random.randint``) repeats
+    indices — the effective sample shrinks and the estimated threshold
+    biases high, under-selecting; a stride of ``d // s`` keeps the draw
+    O(s), duplicate-free and uniformly spread over the vector."""
+    stride = max(1, d // s)
+    offset = jax.random.randint(key, (), 0, d)
+    return (offset + stride * jnp.arange(s, dtype=jnp.int32)) % d
+
+
 def dgck_select(u: jax.Array, k: int, key: jax.Array, sample_ratio: float = 0.01):
     """``DGC_k``: estimate threshold from a random sample, gather candidates
     above it, then exact top-k among the candidates (two small top-k calls
@@ -130,8 +141,7 @@ def dgck_select(u: jax.Array, k: int, key: jax.Array, sample_ratio: float = 0.01
     # bias the sampled threshold low (x1.5) so candidates over-cover k and the
     # exact top-k pass trims — plain k*s/d has huge variance when it rounds to 1
     ks = max(1, min(s, int(math.ceil(1.5 * k * s / d))))
-    samp_idx = jax.random.randint(key, (s,), 0, d)
-    samp = jnp.abs(u[samp_idx])
+    samp = jnp.abs(u[_strided_sample(key, d, s)])
     sv, _ = jax.lax.top_k(samp, ks)
     thres = sv[-1]
     # candidates above the sampled threshold, capped at 2k

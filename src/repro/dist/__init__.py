@@ -1,0 +1,21 @@
+"""Distributed layer: sharding rules, compressed gradient aggregation and
+the shard_map version-compat shims.
+
+``sharding``   per-leaf PartitionSpec rules for the ``model`` axis plus the
+               serve-time data-axis layouts (params, caches).
+``aggregate``  paper Eq. (2) at scale: per-worker error-feedback
+               compression, fixed-capacity sparse all-gather over the data
+               axes, sentinel-aware decode-average, optional two-level
+               pod -> global reduction (DESIGN.md §3-§4).
+``compat``     jax.shard_map partial-auto API across jax versions.
+"""
+from repro.dist import aggregate, compat, sharding
+from repro.dist.aggregate import (aggregate_compressed, aggregate_dense,
+                                  init_residuals)
+from repro.dist.sharding import cache_specs, param_spec, param_specs
+
+__all__ = [
+    "aggregate", "compat", "sharding",
+    "aggregate_compressed", "aggregate_dense", "init_residuals",
+    "cache_specs", "param_spec", "param_specs",
+]

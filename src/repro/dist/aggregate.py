@@ -1,0 +1,269 @@
+"""Compressed gradient aggregation — paper Eq. (2) on a device mesh.
+
+Runs inside the train step's shard_map region: manual over the data axes
+(one program instance per data-parallel worker), auto/GSPMD over
+``model``.  Per gradient leaf and per worker (DESIGN.md §3-§4):
+
+  1. flatten + zero-pad to ``d_pad`` (a multiple of ``model_size``) and
+     fold in the worker's error-feedback residual: ``u = e + g``,
+  2. reshape to ``(model_size, d_row)`` rows — one row per model shard —
+     and run the compressor row-wise with a per-row budget
+     ``k_row = ceil(k / model_size)``, giving a fixed-capacity sparse
+     ``(values, indices)`` pair per row,
+  3. all-gather the pairs over the data axes (wire volume is the
+     compile-time constant ``W * model_size * k_cap * (bits_v + 32)``),
+  4. sentinel-aware decode of every worker's pair, sum, divide by the
+     world size — the Eq. (2) average,
+  5. new residual ``e' = u - decode(own pair)``: exactly the mass the
+     wire did not carry (including any ``codec_dtype`` down-cast error).
+
+``hierarchical=True`` splits step 3-4 into a two-level pod -> global
+reduction: gather/average within the pod over the inner data axes, then
+compress the pod-mean again against the second residual ``resid2`` and
+gather/average over the ``pod`` axis.  Wire volume drops from
+``O(W)`` to ``O(W_inner + n_pods)`` pairs per worker at the price of a
+second (also error-fed) compression.
+
+``momentum_correction > 0`` enables the DGC §3.1 client-side momentum
+blend: ``v = mu*v + g; u = e + v``; coordinates that make it onto the
+wire are zeroed in ``v`` (``resid2`` doubles as the ``v`` state — it is
+mutually exclusive with ``hierarchical``).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import codec
+from repro.core.compressors import CompressorSpec
+from repro.dist import compat
+
+# ---------------------------------------------------------------------------
+# residual layout
+# ---------------------------------------------------------------------------
+
+
+def flat_dims(size: int, model_size: int) -> Tuple[int, int]:
+    """(padded flat length, per-model-shard row length) for a leaf."""
+    d_pad = -(-size // model_size) * model_size
+    return d_pad, d_pad // model_size
+
+
+def init_residuals(params, model_size: int, dtype=jnp.float32):
+    """Zero error-feedback residuals, one flat-padded vector per leaf.
+
+    Each leaf is ``(d_pad,)`` with ``d_pad = ceil(size/model_size) *
+    model_size`` so the vector reshapes evenly into per-model-shard rows.
+    The caller stacks a leading worker axis (see train/state.py).
+    """
+    def zero(p):
+        d_pad, _ = flat_dims(p.size, model_size)
+        return jnp.zeros((d_pad,), dtype)
+
+    return jax.tree.map(zero, params)
+
+
+def leaf_plan(size: int, model_size: int, ratio: float,
+              spec: CompressorSpec) -> Tuple[int, int, int, int]:
+    """(d_pad, d_row, k_row, k_cap_row) for one leaf.
+
+    ``k = max(1, ceil(ratio * size))`` global budget, split evenly over
+    the model shards; the row capacity is the compressor's own
+    over-selection cap (e.g. 4k/3 for Gaussian-k).
+    """
+    d_pad, d_row = flat_dims(size, model_size)
+    k = max(1, math.ceil(ratio * size))
+    k_row = min(d_row, max(1, -(-k // model_size)))
+    k_cap = min(d_row, spec.k_cap(k_row, d_row))
+    return d_pad, d_row, k_row, k_cap
+
+
+# ---------------------------------------------------------------------------
+# worker-local compression (pure: unit-testable without a mesh)
+# ---------------------------------------------------------------------------
+
+
+def _select_rows(spec: CompressorSpec, u_rows: jax.Array, k_row: int, key):
+    if spec.needs_key:
+        keys = jax.random.split(key, u_rows.shape[0])
+        return jax.vmap(lambda r, kk: spec.select(r, k_row, kk))(u_rows, keys)
+    return jax.vmap(lambda r: spec.select(r, k_row, None))(u_rows)
+
+
+def _decode_rows(values: jax.Array, indices: jax.Array, d_row: int,
+                 dtype) -> jax.Array:
+    return jax.vmap(
+        lambda v, i: codec.decode(v.astype(dtype), i, d_row))(values, indices)
+
+
+def compress_worker(g: jax.Array, e: jax.Array, spec: CompressorSpec,
+                    ratio: float, model_size: int, key, *,
+                    codec_dtype=None, momentum: float = 0.0,
+                    v: Optional[jax.Array] = None):
+    """One worker's error-feedback compression of one gradient leaf.
+
+    ``g`` is the leaf-shaped local gradient, ``e`` the ``(d_pad,)`` flat
+    residual (and ``v`` the DGC velocity when ``momentum > 0``).
+
+    Returns ``(values, indices, new_e, new_v)`` with ``values/indices``
+    of shape ``(model_size, k_cap_row)`` and the conservation invariant
+    ``decode(values, indices) + new_e == e + pad(g)`` (resp. ``e + v``
+    under momentum correction) holding row-wise by construction.
+    """
+    d = g.size
+    d_pad, d_row, k_row, _ = leaf_plan(d, model_size, ratio, spec)
+    g_flat = jnp.pad(g.reshape(-1), (0, d_pad - d)).astype(e.dtype)
+    if momentum > 0.0:
+        v = momentum * v + g_flat
+        u = e + v
+    else:
+        u = e + g_flat
+    u_rows = u.reshape(model_size, d_row)
+
+    values, indices = _select_rows(spec, u_rows, k_row, key)
+    if codec_dtype is not None:
+        values = values.astype(codec_dtype)
+    decoded = _decode_rows(values, indices, d_row, u.dtype)
+    new_e = (u_rows - decoded).reshape(-1).astype(e.dtype)
+
+    new_v = None
+    if momentum > 0.0:
+        # wire-exchanged coordinates stop accumulating velocity (DGC §3.1)
+        hit = _decode_rows(jnp.ones_like(values, u.dtype), indices, d_row,
+                           u.dtype)
+        keep = 1.0 - jnp.clip(hit, 0.0, 1.0)
+        new_v = (v.reshape(model_size, d_row) * keep).reshape(-1).astype(
+            e.dtype)
+    return values, indices, new_e, new_v
+
+
+# ---------------------------------------------------------------------------
+# mesh-level aggregation (call inside shard_map, manual over data axes)
+# ---------------------------------------------------------------------------
+
+
+def aggregate_dense(grads, data_axes):
+    """Dense-SGD baseline: plain mean over the data axes."""
+    axes = tuple(data_axes)
+    return jax.tree.map(lambda g: jax.lax.pmean(g, axes), grads)
+
+
+def _gather_mean(values, indices, axis, n: int, d_row: int, dtype):
+    """All-gather fixed-capacity pairs over ``axis`` and decode-average.
+
+    Returns the ``(model_size, d_row)`` mean of all ``n`` participants'
+    decoded contributions (identical on every participant).
+    """
+    v_all, i_all = jax.lax.all_gather((values, indices), axis)
+    decoded = jax.vmap(
+        lambda v, i: _decode_rows(v, i, d_row, dtype))(v_all, i_all)
+    return jnp.sum(decoded, axis=0) / n
+
+
+def aggregate_compressed(grads, resid, spec: CompressorSpec, ratio: float,
+                         data_axes, model_axis: str, model_size: int, key, *,
+                         hierarchical: bool = False, resid2=None,
+                         world: int = 1, codec_dtype=None,
+                         momentum_correction: float = 0.0):
+    """Eq. (2) sparse aggregation of a gradient pytree.
+
+    Returns ``(agg, new_resid, new_resid2, metrics)``; ``agg`` has the
+    gradient's tree/shape/dtype, residual trees are flat-padded like
+    ``init_residuals``.  ``metrics`` are replicated scalars: ``density``
+    (measured nnz fraction), ``comm_bits_sparse`` / ``comm_bits_dense``
+    (per-worker wire volume, compile-time constants) and ``wire_bytes``.
+    """
+    axes = tuple(data_axes)
+    mc = float(momentum_correction)
+    # without a second residual the two-level path cannot run; fall back
+    # to the flat gather over ALL data axes rather than silently dropping
+    # the outer (pod) contribution
+    hier = bool(hierarchical) and len(axes) > 1 and resid2 is not None
+    if mc > 0.0 and hier:
+        raise ValueError("momentum_correction reuses resid2 as the DGC "
+                         "velocity state; combine it with the flat path, "
+                         "not hierarchical aggregation")
+    if mc > 0.0 and resid2 is None:
+        raise ValueError("momentum_correction needs a velocity state: "
+                         "allocate resid2 via init_train_state(..., "
+                         "hierarchical=True)")
+    use_v = mc > 0.0
+
+    if hier:
+        outer_axis, inner_axes = axes[0], axes[1:]
+        n_pods = compat.axis_size(outer_axis)
+        n_inner = max(1, world // n_pods)
+    else:
+        outer_axis, inner_axes = None, axes
+        n_pods, n_inner = 1, world
+
+    g_leaves, treedef = jax.tree.flatten(grads)
+    e_leaves = treedef.flatten_up_to(resid)
+    r2_leaves = (treedef.flatten_up_to(resid2) if resid2 is not None
+                 else [None] * len(g_leaves))
+
+    val_bits = jnp.dtype(codec_dtype).itemsize * 8 if codec_dtype else 32
+    d_total = 0
+    nnz_local = jnp.zeros((), jnp.float32)
+    cap_total = 0
+    bits_sparse = 0.0
+    bits_dense = 0.0
+
+    agg_leaves, new_e_leaves, new_r2_leaves = [], [], []
+    for li, (g, e, r2) in enumerate(zip(g_leaves, e_leaves, r2_leaves)):
+        lkey = jax.random.fold_in(key, li)
+        d = g.size
+        d_pad, d_row, k_row, k_cap = leaf_plan(d, model_size, ratio, spec)
+
+        values, indices, new_e, new_v = compress_worker(
+            g, e, spec, ratio, model_size, lkey, codec_dtype=codec_dtype,
+            momentum=mc if use_v else 0.0, v=r2 if use_v else None)
+        mean = _gather_mean(values, indices, inner_axes, n_inner, d_row,
+                            jnp.float32)
+        nnz_local += codec.nnz(indices).astype(jnp.float32)
+
+        if hier:
+            # second level: compress the pod-mean against resid2 and
+            # average across pods (identical on every worker of a pod)
+            u2 = r2 + mean.reshape(-1)
+            v2, i2 = _select_rows(spec, u2.reshape(model_size, d_row),
+                                  k_row, jax.random.fold_in(lkey, 1))
+            if codec_dtype is not None:
+                v2 = v2.astype(codec_dtype)
+            mean = _gather_mean(v2, i2, outer_axis, n_pods, d_row,
+                                jnp.float32)
+            new_r2 = (u2.reshape(model_size, d_row) -
+                      _decode_rows(v2, i2, d_row, jnp.float32)
+                      ).reshape(-1).astype(r2.dtype)
+            nnz_local += codec.nnz(i2).astype(jnp.float32)
+        elif use_v:
+            new_r2 = new_v
+        else:
+            new_r2 = r2
+
+        agg_leaves.append(
+            mean.reshape(-1)[:d].reshape(g.shape).astype(g.dtype))
+        new_e_leaves.append(new_e)
+        new_r2_leaves.append(new_r2)
+
+        pair_bits = model_size * k_cap * (val_bits + 32)
+        levels = n_inner + (n_pods if hier else 0)
+        bits_sparse += float(levels * pair_bits)
+        bits_dense += float(2 * d * jnp.dtype(g.dtype).itemsize * 8)
+        d_total += d
+        cap_total += model_size * k_cap
+
+    metrics = {
+        "density": jax.lax.pmean(nnz_local / d_total, axes),
+        "density_cap": jnp.float32(cap_total / d_total),
+        "comm_bits_sparse": jnp.float32(bits_sparse),
+        "comm_bits_dense": jnp.float32(bits_dense),
+        "wire_bytes": jnp.float32(bits_sparse / 8.0),
+    }
+    new_resid = treedef.unflatten(new_e_leaves)
+    new_resid2 = (treedef.unflatten(new_r2_leaves)
+                  if resid2 is not None else None)
+    return treedef.unflatten(agg_leaves), new_resid, new_resid2, metrics

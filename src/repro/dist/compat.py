@@ -1,0 +1,63 @@
+"""shard_map partial-auto compatibility across jax versions.
+
+The train step is written against the modern API
+(``jax.shard_map(..., axis_names=..., check_vma=...)``, raw
+PartitionSpec sharding constraints legal on auto axes inside the manual
+region).  jax 0.4.x only ships ``jax.experimental.shard_map.shard_map``
+with the ``auto=frozenset(...)`` spelling, and its SPMD partitioner
+rejects NamedSharding constraints emitted inside a manual subgroup
+(``IsManualSubgroup`` check failure, hard abort).  So on 0.4.x:
+
+* ``shard_map`` translates ``axis_names`` into the complementary
+  ``auto`` set and disables the replication checker, and
+* ``auto_axis_constraint`` degrades to identity — the model-axis layout
+  becomes a GSPMD propagation hint we forgo rather than a correctness
+  requirement (every consumer computes the same values, just possibly
+  replicated over ``model``).
+"""
+from __future__ import annotations
+
+import jax
+
+_HAS_NEW_SHARD_MAP = hasattr(jax, "shard_map")
+
+
+def supports_auto_axis_constraints() -> bool:
+    """True when sharding constraints on auto axes are legal inside the
+    shard_map manual region (modern jax only)."""
+    return _HAS_NEW_SHARD_MAP
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names,
+              check_vma: bool = False):
+    """Manual over ``axis_names``, auto (GSPMD) over the rest of ``mesh``.
+
+    On jax 0.4.x the partial-auto path miscompiles ``lax.scan`` bodies
+    (``IsManualSubgroup`` check failures deep in the SPMD partitioner),
+    so we go FULL manual there instead: the leftover axes are still bound
+    mesh axes, but every value whose spec does not mention them is simply
+    replicated across them and each replica computes identical results.
+    Numerics are unchanged; only the model-axis layout hint is lost.
+    """
+    if _HAS_NEW_SHARD_MAP:
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, axis_names=axis_names,
+                             check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=bool(check_vma))
+
+
+def auto_axis_constraint(leaf, spec):
+    """with_sharding_constraint for a spec naming only auto axes, safe to
+    call inside the shard_map manual region on every supported jax."""
+    if _HAS_NEW_SHARD_MAP:
+        return jax.lax.with_sharding_constraint(leaf, spec)
+    return leaf
+
+
+def axis_size(axis_name) -> int:
+    """Static size of a bound mesh axis (or tuple of axes) from inside the
+    manual region.  ``psum`` of a python literal constant-folds to the axis
+    size without emitting a collective."""
+    return jax.lax.psum(1, axis_name)

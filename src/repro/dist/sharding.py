@@ -1,0 +1,104 @@
+"""Per-leaf PartitionSpec rules (DESIGN.md §4).
+
+Training shards every parameter leaf over the ``model`` mesh axis only
+(the data axes carry batch + residual parallelism); serving additionally
+spreads the joint data axes over a second dim (see serve/steps.py).
+
+The rules are name-based with a divisibility guard: a dim is only ever
+sharded when its size is a positive multiple of the axis size, so the
+specs are valid for any mesh — leaves that don't divide simply stay
+replicated (they are the small ones: norms, biases, gates).
+
+Projections that *produce* the hidden features (wq/wk/wv, w_gate/w_up,
+in_proj, ...) shard their output dim; projections that *consume* them
+(wo, out_proj, w_down, dt_proj) shard their contraction dim, so a
+block's pair of matmuls needs a single all-reduce, the classic
+Megatron-style split.  ``lm_head`` shards the vocab dim, which is what
+lets the CE loss reduce shard-locally (see models/model.py).
+
+Leaves under ``params["stack"]`` carry a leading lax.scan stacking dim
+(period repetitions); it is never sharded over ``model``.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+# Weights whose *contraction* (input) dim is model-sharded: the second
+# matmul of a Megatron pair.  Everything else 2-D+ defaults to sharding
+# its trailing (output) dim.
+_IN_DIM_SHARDED = frozenset({"wo", "out_proj", "w_down", "dt_proj"})
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        key = getattr(entry, "key", None)
+        if isinstance(key, str):
+            return key
+    return ""
+
+
+def _stacked(path) -> bool:
+    return bool(path) and str(getattr(path[0], "key", "")) == "stack"
+
+
+def _divisible(size: int, n: int) -> bool:
+    return size >= n and size % n == 0
+
+
+def param_spec(path, leaf, model_axis: str, model_size: int) -> P:
+    """PartitionSpec of one parameter leaf for the ``model`` axis."""
+    shape = tuple(leaf.shape)
+    ndim = len(shape)
+    lo = 1 if _stacked(path) else 0  # never shard the scan-stacked dim
+    if model_size <= 1 or ndim - lo < 2:
+        return P()  # scalars, vectors, norms, biases: replicate
+    name = _leaf_name(path)
+    prefer = ndim - 2 if name in _IN_DIM_SHARDED else ndim - 1
+    candidates = [prefer] + sorted(
+        (d for d in range(lo, ndim) if d != prefer),
+        key=lambda d: -shape[d])
+    for dim in candidates:
+        if dim >= lo and _divisible(shape[dim], model_size):
+            spec = [None] * ndim
+            spec[dim] = model_axis
+            return P(*spec)
+    return P()
+
+
+def param_specs(params, model_axis: str, model_size: int):
+    """Tree of ``param_spec`` results matching ``params``."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec(path, leaf, model_axis, model_size),
+        params)
+
+
+def cache_specs(cache, data_axes, data_size: int, model_axis: str,
+                model_size: int):
+    """Serve-time KV/SSM/recurrent cache layouts.
+
+    The batch dim (first dim after any scan-stacking dim) shards over the
+    joint data axes — decode is batch-parallel; the largest remaining
+    divisible dim shards over ``model`` to match the attention/SSM head
+    layout of the params.
+    """
+    data_axes = tuple(data_axes)
+    joint = data_axes if len(data_axes) > 1 else data_axes[0]
+
+    def spec_of(path, leaf):
+        shape = tuple(leaf.shape)
+        ndim = len(shape)
+        spec = [None] * ndim
+        batch_dim = 1 if _stacked(path) else 0
+        if batch_dim < ndim and data_size > 1 and \
+                _divisible(shape[batch_dim], data_size):
+            spec[batch_dim] = joint
+        if model_size > 1:
+            for dim in sorted(range(batch_dim + 1, ndim),
+                              key=lambda d: -shape[d]):
+                if _divisible(shape[dim], model_size):
+                    spec[dim] = model_axis
+                    break
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(spec_of, cache)

@@ -12,8 +12,13 @@ correction moves the momentum accumulation BEFORE compression, per worker:
     v and u (they have been applied), unselected keep accumulating.
 
 The server-side update is then plain (momentum-free) SGD on the aggregated
-sparse tensor.  This module provides the per-worker state transform used
-by the train step when ``momentum_correction=True``.
+sparse tensor.  This module is the REFERENCE single-vector formulation of
+that transform (kept exact and unit-tested in
+tests/test_momentum_correction.py); the production path is the row-wise,
+wire-dtype-aware equivalent in ``repro.dist.aggregate.compress_worker``
+(``momentum > 0``), which the train step invokes via
+``make_train_step(..., momentum_correction=mu)``.  Semantics changes must
+be applied to both.
 """
 from __future__ import annotations
 

@@ -25,9 +25,15 @@ CASES = {
                          ffn_pattern=("none",), **BASE),
     "parallel": ModelConfig(name="c-par", arch_type="dense",
                             parallel_block=True, **BASE),
+    # capacity_factor = num_experts makes dispatch lossless: capacity
+    # dropping is batch-composition dependent (a 32-token forward drops
+    # a popular expert's tail positions, a 1-token decode never does),
+    # which would break decode-vs-forward equality for reasons unrelated
+    # to cache exactness — the thing this test checks.
     "moe": ModelConfig(name="c-moe", arch_type="moe",
                        ffn_pattern=("moe",), num_experts=4,
-                       experts_per_token=2, moe_d_ff=64, **BASE),
+                       experts_per_token=2, moe_d_ff=64,
+                       capacity_factor=4.0, **BASE),
 }
 
 

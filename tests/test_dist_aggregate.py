@@ -1,0 +1,134 @@
+"""Conservation invariants the aggregation layer relies on (DESIGN.md §3).
+
+These exercise ``repro.dist.aggregate``'s worker-local pieces directly —
+no mesh needed — so a compressor or codec regression is caught here
+before it shows up as a (much harder to debug) distributed-training
+numerics drift in tests/test_distributed.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import SENTINEL, codec, compressors, get_compressor
+from repro.core.compressors import _strided_sample
+from repro.dist import aggregate
+from repro.dist.sharding import cache_specs
+
+ALL = compressors.available()
+
+
+def _leaf(seed, shape, scale=0.01):
+    return scale * jax.random.normal(jax.random.PRNGKey(seed), shape)
+
+
+@pytest.mark.parametrize("name", ALL)
+@pytest.mark.parametrize("model_size", [1, 4])
+def test_compress_worker_conservation(name, model_size):
+    """decode(values, indices) + new_residual == e + pad(g) for every
+    compressor, through the row-wise (per-model-shard) path aggregate.py
+    uses — the Eq. (2) invariant that makes error feedback lossless."""
+    spec = get_compressor(name)
+    g = _leaf(0, (37, 11))  # 407 elements -> pads to 408 for model_size=4
+    d_pad, d_row = aggregate.flat_dims(g.size, model_size)
+    e = _leaf(1, (d_pad,), 0.001)
+    values, indices, new_e, new_v = aggregate.compress_worker(
+        g, e, spec, 0.02, model_size, jax.random.PRNGKey(2))
+    assert values.shape == indices.shape
+    assert values.shape[0] == model_size
+    assert new_v is None
+    u = e + jnp.pad(g.reshape(-1), (0, d_pad - g.size))
+    decoded = jax.vmap(
+        lambda v, i: codec.decode(v, i, d_row))(values, indices).reshape(-1)
+    np.testing.assert_allclose(np.asarray(decoded + new_e), np.asarray(u),
+                               rtol=1e-6, atol=1e-8)
+
+
+def test_compress_worker_codec_dtype_conservation():
+    """With a bf16 wire dtype the down-cast error must land in the
+    residual, not vanish: conservation holds against the *decoded wire*
+    values exactly, and against u within bf16 rounding."""
+    spec = get_compressor("topk")
+    g = _leaf(3, (256,), 1.0)
+    e = jnp.zeros((256,))
+    values, indices, new_e, _ = aggregate.compress_worker(
+        g, e, spec, 0.05, 1, None, codec_dtype=jnp.bfloat16)
+    assert values.dtype == jnp.bfloat16
+    decoded = codec.decode(values.astype(jnp.float32)[0], indices[0], 256)
+    np.testing.assert_allclose(np.asarray(decoded + new_e),
+                               np.asarray(e + g), rtol=1e-6, atol=1e-8)
+    # the residual now carries the quantisation error on selected coords
+    sel = np.asarray(indices[0])
+    assert np.any(np.asarray(new_e)[sel] != 0.0)
+
+
+def test_compact_by_mask_overflow_drops_highest_indices():
+    """More masked elements than capacity: the first k_cap in index order
+    survive, the surplus is dropped (and must therefore stay in the
+    residual — checked via the conservation identity)."""
+    u = jnp.arange(1.0, 17.0)  # 16 elements, all nonzero
+    mask = jnp.ones((16,), bool)
+    values, indices = codec.compact_by_mask(u, mask, 5)
+    np.testing.assert_array_equal(np.asarray(indices), np.arange(5))
+    np.testing.assert_array_equal(np.asarray(values), np.asarray(u)[:5])
+    resid = u - codec.decode(values, indices, 16)
+    np.testing.assert_allclose(np.asarray(resid)[5:], np.asarray(u)[5:])
+    np.testing.assert_allclose(np.asarray(resid)[:5], 0.0)
+
+
+def test_compact_by_mask_empty_mask_is_all_sentinel():
+    values, indices = codec.compact_by_mask(jnp.ones((8,)),
+                                            jnp.zeros((8,), bool), 3)
+    assert np.all(np.asarray(indices) == SENTINEL)
+    assert np.all(np.asarray(values) == 0.0)
+
+
+@pytest.mark.parametrize("model_size", [1, 2, 8])
+def test_init_residuals_padding_and_dtype(model_size):
+    params = {"a": jnp.zeros((37, 11)), "b": jnp.zeros((5,)),
+              "nest": {"c": jnp.zeros((8, 8, 3))}}
+    resid = aggregate.init_residuals(params, model_size, jnp.bfloat16)
+    for p, e in zip(jax.tree.leaves(params), jax.tree.leaves(resid)):
+        d_pad = -(-p.size // model_size) * model_size
+        assert e.shape == (d_pad,)
+        assert d_pad % model_size == 0 and d_pad - p.size < model_size
+        assert e.dtype == jnp.bfloat16
+        assert not np.asarray(e).any()
+
+
+def test_leaf_plan_budget_split():
+    spec = get_compressor("topk")
+    d_pad, d_row, k_row, k_cap = aggregate.leaf_plan(1000, 4, 0.01, spec)
+    assert (d_pad, d_row) == (1000, 250)
+    assert k_row == 3  # ceil(ceil(0.01*1000)/4) = ceil(10/4)
+    assert k_cap == 3
+    # tiny leaf: k never collapses to zero nor exceeds the row
+    _, d_row, k_row, k_cap = aggregate.leaf_plan(6, 4, 0.001, spec)
+    assert 1 <= k_row <= d_row and k_cap <= d_row
+
+
+def test_strided_sample_distinct_and_in_range():
+    """The DGC threshold sample must be duplicate-free: sampling with
+    replacement shrinks the effective sample and biases the estimated
+    threshold high."""
+    for seed, (d, s) in enumerate([(10_000, 100), (333, 5), (64, 64)]):
+        idx = np.asarray(_strided_sample(jax.random.PRNGKey(seed), d, s))
+        assert idx.shape == (s,)
+        assert idx.min() >= 0 and idx.max() < d
+        assert len(set(idx.tolist())) == s, "duplicate sample indices"
+
+
+def test_cache_specs_divisibility_guard():
+    cache = {"stack": [{"k": jnp.zeros((3, 8, 32, 2, 16)),
+                        "v": jnp.zeros((3, 8, 32, 2, 16))}],
+             "tail": [{"ssm": jnp.zeros((8, 48, 7))}]}
+    specs = cache_specs(cache, ("data",), 4, "model", 16)
+    flat = jax.tree_util.tree_flatten_with_path(cache)[0]
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    for (path, leaf), spec in zip(flat, flat_s):
+        for dim, ax in enumerate(spec):
+            if ax == "model":
+                assert leaf.shape[dim] % 16 == 0
+            elif ax is not None:  # the joint data axes on the batch dim
+                assert leaf.shape[dim] % 4 == 0
