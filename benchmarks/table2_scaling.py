@@ -10,10 +10,17 @@ analytically from the roofline terms of the compiled dry-run artifacts
   T_iter(sparse) = max(compute, memory) + coll_sparse
   scaling_eff    = T_compute-only / T_iter   (weak scaling analogue)
 
-Additionally reports the closed-form communication-volume reduction
-dense vs sparse (always available, no dry-run needed):
-  dense:  ring all-reduce ≈ 2·d·bytes per worker
-  sparse: all-gather of P·k_cap·8 bytes
+Additionally reports, per architecture and with no dry-run needed:
+
+* the closed-form per-worker communication volume of every wire
+  strategy side by side (dist/aggregate.py `strategy_wire_pairs`):
+    dense:      ring all-reduce ≈ 2·d·bytes
+    allgather:  P      · k_cap · 8 bytes   (O(kP) — PR-1 flat path)
+    gtopk:      log2 P · k_cap · 8 bytes   (O(k log P) recursive doubling)
+* the *measured* cost of one gTop-k merge step (decode two codec pairs,
+  scatter-add, re-select top-k_cap, re-encode) against the allgather
+  path's P-pair decode-average — the compute price paid for the wire
+  reduction.
 """
 from __future__ import annotations
 
@@ -23,11 +30,16 @@ import os
 
 from repro.configs import ARCHS
 
+P_WORKERS = 16       # data-parallel workers (paper's worker count)
+RATIO = 0.001
+
 
 def _closed_form_rows():
+    from repro.dist.aggregate import strategy_wire_pairs
+
     rows = []
-    P = 16            # data-parallel workers (paper's worker count)
-    ratio = 0.001
+    ag_pairs = strategy_wire_pairs("allgather", P_WORKERS)
+    gt_pairs = strategy_wire_pairs("gtopk", P_WORKERS)
     for name, cfg in sorted(ARCHS.items()):
         import jax
         from repro.models import init_params
@@ -35,17 +47,71 @@ def _closed_form_rows():
                                 jax.random.PRNGKey(0))
         d = sum(x.size for x in jax.tree.leaves(shapes))
         dense_bytes = 2 * d * 2                      # bf16 ring all-reduce
-        k_cap = math.ceil(4 * ratio * d / 3)
-        sparse_bytes = P * k_cap * 8                 # values f32 + idx s32
+        k_cap = math.ceil(4 * RATIO * d / 3)
+        pair_bytes = k_cap * 8                       # values f32 + idx s32
+        ag_bytes = ag_pairs * pair_bytes
+        gt_bytes = gt_pairs * pair_bytes
         rows.append((f"table2/comm/{name}", 0.0,
                      f"dense_MB={dense_bytes/2**20:.1f};"
-                     f"sparse_MB={sparse_bytes/2**20:.1f};"
-                     f"reduction={dense_bytes/sparse_bytes:.0f}x"))
+                     f"allgather_MB={ag_bytes/2**20:.1f};"
+                     f"gtopk_MB={gt_bytes/2**20:.1f};"
+                     f"allgather_red={dense_bytes/ag_bytes:.0f}x;"
+                     f"gtopk_red={dense_bytes/gt_bytes:.0f}x"))
     return rows
+
+
+def _merge_cost_rows():
+    """Measured per-call cost of the two sparse aggregation kernels.
+
+    gtopk_round: one pairwise merge (2 decodes + scatter-add + exact
+    top-k_cap re-select + re-encode) — executed log2(P) times per step.
+    allgather_decode: sentinel-aware decode-average of all P workers'
+    pairs — executed once per step.  Both on a d=2^20 leaf at the
+    paper's δ=0.001, jitted, CPU wall time.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks.common import timeit
+    from repro.core import codec
+    from repro.dist.aggregate import encode_rows_topk
+
+    d = 1 << 20
+    k_cap = math.ceil(4 * RATIO * d / 3)
+    keys = jax.random.split(jax.random.PRNGKey(0), 2 + P_WORKERS)
+    enc = lambda key: encode_rows_topk(  # noqa: E731
+        jax.random.normal(key, (1, d)), k_cap)
+    (v1, i1), (v2, i2) = enc(keys[0]), enc(keys[1])
+
+    @jax.jit
+    def gtopk_round(v1, i1, v2, i2):
+        dense = (codec.decode(v1[0], i1[0], d)
+                 + codec.decode(v2[0], i2[0], d))
+        return encode_rows_topk(dense[None], k_cap)
+
+    vs, is_ = jax.tree.map(
+        lambda *x: jnp.stack(x), *[enc(k) for k in keys[2:]])
+
+    @jax.jit
+    def allgather_decode(vs, is_):
+        decoded = jax.vmap(lambda v, i: codec.decode(v[0], i[0], d))(vs, is_)
+        return jnp.sum(decoded, axis=0) / P_WORKERS
+
+    rounds = int(math.log2(P_WORKERS))
+    us_merge = timeit(gtopk_round, v1, i1, v2, i2)
+    us_ag = timeit(allgather_decode, vs, is_)
+    return [
+        (f"table2/merge/gtopk_round/d={d}", round(us_merge, 1),
+         f"k_cap={k_cap};rounds@P{P_WORKERS}={rounds};"
+         f"step_total_us={rounds * us_merge:.0f}"),
+        (f"table2/merge/allgather_decode/d={d}", round(us_ag, 1),
+         f"k_cap={k_cap};pairs={P_WORKERS};step_total_us={us_ag:.0f}"),
+    ]
 
 
 def run():
     rows = _closed_form_rows()
+    rows += _merge_cost_rows()
     path = "experiments/dryrun_single.json"
     if not os.path.exists(path):
         rows.append(("table2/roofline", 0.0, "dryrun json missing; SKIP"))

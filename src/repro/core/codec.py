@@ -6,6 +6,22 @@ A compressed gradient is a pair ``(values, indices)`` of static shape
 collective volume of the sparse all-gather a compile-time constant —
 this is the TPU adaptation of the paper's variable-length GPU mask
 writes (DESIGN.md §3).
+
+The codec contract every producer/consumer relies on:
+
+* **Sentinel handling** — a slot with ``index == SENTINEL`` is padding;
+  its value MUST be 0 and decoders MUST skip it (both decoders below
+  route sentinels to an out-of-range scatter slot dropped by XLA's
+  ``mode="drop"``).
+* **Duplicate indices** — decoding scatter-*adds*, so a coordinate that
+  appears in several slots (or in several workers' pairs summed into one
+  buffer) accumulates; this is what makes the decode-sum of all workers'
+  pairs equal the sum of their decoded gradients.
+* **Capacity overflow** — encoders never emit more than ``k_cap`` real
+  slots.  ``compact_by_mask`` truncates deterministically (lowest
+  indices win) and the surplus mass must stay in the caller's
+  error-feedback residual via the conservation identity
+  ``u == decode(encode(u)) + residual``.
 """
 from __future__ import annotations
 
@@ -18,11 +34,15 @@ SENTINEL = -1
 def compact_by_mask(u: jax.Array, mask: jax.Array, k_cap: int):
     """Compact the masked elements of ``u`` into a fixed ``(k_cap,)`` buffer.
 
-    Elements are kept in index order.  If more than ``k_cap`` elements are
-    masked, the surplus (highest indices) is dropped — error feedback
-    re-absorbs them on the next iteration.
+    Elements are kept in index order.  Capacity overflow: if more than
+    ``k_cap`` elements are masked, the surplus (highest indices) is
+    dropped — by the conservation identity the dropped mass lands in the
+    error-feedback residual, which re-submits it next step (DESIGN.md
+    §3: over-selection only ever costs one step of staleness).
 
-    Returns ``(values, indices)`` with sentinel padding.
+    Returns ``(values, indices)`` with sentinel padding: unused slots
+    carry ``indices == SENTINEL`` and ``values == 0``.  Real indices are
+    strictly increasing, hence duplicate-free.
     """
     d = u.shape[0]
     mask = mask.astype(jnp.int32)
@@ -39,15 +59,27 @@ def compact_by_mask(u: jax.Array, mask: jax.Array, k_cap: int):
 
 
 def decode(values: jax.Array, indices: jax.Array, d: int) -> jax.Array:
-    """Scatter a compressed ``(values, indices)`` pair back to dense ``(d,)``."""
+    """Scatter a compressed ``(values, indices)`` pair back to dense ``(d,)``.
+
+    Sentinel slots (``index == SENTINEL``) contribute nothing — they are
+    rewritten to the out-of-range slot ``d`` with value 0 and dropped by
+    the scatter.  Duplicate real indices scatter-*add* (the §3 contract);
+    pairs produced by this module's encoders are duplicate-free, but
+    merged/relayed pairs (dist/aggregate.py) rely on additivity.
+    """
     safe = jnp.where(indices == SENTINEL, d, indices)
-    return jnp.zeros((d,), values.dtype).at[safe].set(
+    return jnp.zeros((d,), values.dtype).at[safe].add(
         jnp.where(indices == SENTINEL, 0, values), mode="drop"
     )
 
 
 def decode_add(dense: jax.Array, values: jax.Array, indices: jax.Array) -> jax.Array:
-    """Scatter-*add* a compressed pair into an existing dense buffer."""
+    """Scatter-*add* a compressed pair into an existing dense buffer.
+
+    Same sentinel and duplicate-index semantics as :func:`decode`
+    (sentinels vanish, duplicates accumulate); ``dense`` supplies the
+    accumulation base and the output length.
+    """
     d = dense.shape[0]
     safe = jnp.where(indices == SENTINEL, d, indices)
     return dense.at[safe].add(
@@ -56,5 +88,9 @@ def decode_add(dense: jax.Array, values: jax.Array, indices: jax.Array) -> jax.A
 
 
 def nnz(indices: jax.Array) -> jax.Array:
-    """Number of real (non-padding) entries in a compressed pair."""
+    """Number of real (non-sentinel) slots in a compressed pair.
+
+    Counts occupancy, not distinct coordinates: a duplicated index (legal
+    in merged pairs) counts once per slot it occupies.
+    """
     return jnp.sum((indices != SENTINEL).astype(jnp.int32))

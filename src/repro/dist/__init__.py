@@ -4,18 +4,24 @@ the shard_map version-compat shims.
 ``sharding``   per-leaf PartitionSpec rules for the ``model`` axis plus the
                serve-time data-axis layouts (params, caches).
 ``aggregate``  paper Eq. (2) at scale: per-worker error-feedback
-               compression, fixed-capacity sparse all-gather over the data
-               axes, sentinel-aware decode-average, optional two-level
-               pod -> global reduction (DESIGN.md §3-§4).
-``compat``     jax.shard_map partial-auto API across jax versions.
+               compression, then one of three wire strategies over the
+               data axes — flat sparse all-gather, two-level
+               pod -> global reduction, or gTop-k recursive doubling
+               (``STRATEGIES``; DESIGN.md §3-§4, §7).
+``compat``     jax.shard_map partial-auto API across jax versions (plus
+               the ppermute shim the gTop-k rounds ride on).
 """
 from repro.dist import aggregate, compat, sharding
-from repro.dist.aggregate import (aggregate_compressed, aggregate_dense,
-                                  init_residuals)
+from repro.dist.aggregate import (STRATEGIES, aggregate_compressed,
+                                  aggregate_dense, gtopk_simulate,
+                                  init_residuals, resolve_strategy,
+                                  strategy_wire_pairs)
 from repro.dist.sharding import cache_specs, param_spec, param_specs
 
 __all__ = [
     "aggregate", "compat", "sharding",
-    "aggregate_compressed", "aggregate_dense", "init_residuals",
+    "STRATEGIES", "aggregate_compressed", "aggregate_dense",
+    "gtopk_simulate", "init_residuals", "resolve_strategy",
+    "strategy_wire_pairs",
     "cache_specs", "param_spec", "param_specs",
 ]

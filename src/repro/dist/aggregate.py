@@ -17,12 +17,25 @@ Runs inside the train step's shard_map region: manual over the data axes
   5. new residual ``e' = u - decode(own pair)``: exactly the mass the
      wire did not carry (including any ``codec_dtype`` down-cast error).
 
-``hierarchical=True`` splits step 3-4 into a two-level pod -> global
-reduction: gather/average within the pod over the inner data axes, then
-compress the pod-mean again against the second residual ``resid2`` and
-gather/average over the ``pod`` axis.  Wire volume drops from
-``O(W)`` to ``O(W_inner + n_pods)`` pairs per worker at the price of a
-second (also error-fed) compression.
+Step 3-4 is the ``strategy`` choice (DESIGN.md §3, §7):
+
+``"allgather"``     flat sparse all-gather over all data axes —
+                    ``O(W)`` codec pairs per worker.
+``"hierarchical"``  two-level pod -> global reduction: gather/average
+                    within the pod over the inner data axes, then
+                    compress the pod-mean again against the second
+                    residual ``resid2`` and gather/average over the
+                    ``pod`` axis — ``O(W_inner + n_pods)`` pairs at the
+                    price of a second (also error-fed) compression.
+``"gtopk"``         gTop-k recursive doubling (Shi et al.,
+                    arXiv:1901.04359): ``log2(W)`` ppermute rounds of
+                    pairwise codec merges (decode both ``(k_cap,)``
+                    pairs, scatter-add, re-select top-``k_cap``,
+                    re-encode) — ``O(log W)`` pairs per worker, one
+                    ``(k_cap,)`` pair per round.  Mass dropped by a
+                    merge re-selection is credited back to the merging
+                    workers' residuals (divided by the replica count of
+                    that merge) so Eq. (2) conservation holds globally.
 
 ``momentum_correction > 0`` enables the DGC §3.1 client-side momentum
 blend: ``v = mu*v + g; u = e + v``; coordinates that make it onto the
@@ -112,6 +125,14 @@ def compress_worker(g: jax.Array, e: jax.Array, spec: CompressorSpec,
     of shape ``(model_size, k_cap_row)`` and the conservation invariant
     ``decode(values, indices) + new_e == e + pad(g)`` (resp. ``e + v``
     under momentum correction) holding row-wise by construction.
+
+    The pairs follow the ``core.codec`` contract: unused slots are
+    sentinel-padded with value 0, real indices are duplicate-free, and a
+    selector masking more than ``k_cap_row`` elements is truncated by
+    ``compact_by_mask`` with the surplus mass landing in ``new_e`` (the
+    conservation identity makes overflow lossy only for one step).  With
+    ``codec_dtype`` the down-cast error is likewise decoded into
+    ``new_e``, so the wire stays Eq.-2 exact.
     """
     d = g.size
     d_pad, d_row, k_row, _ = leaf_plan(d, model_size, ratio, spec)
@@ -141,6 +162,174 @@ def compress_worker(g: jax.Array, e: jax.Array, spec: CompressorSpec,
 
 
 # ---------------------------------------------------------------------------
+# gTop-k recursive doubling (pure pieces: unit-testable without a mesh)
+# ---------------------------------------------------------------------------
+
+STRATEGIES = ("allgather", "gtopk", "hierarchical")
+
+
+def _log2_exact(n: int, what: str = "world size") -> int:
+    """log2 of a power of two; raises for anything else (the XOR pairing
+    of the recursive-doubling tree needs exact halving at every round)."""
+    if n < 1 or n & (n - 1):
+        raise ValueError(
+            f"gtopk strategy needs a power-of-two {what}, got {n}; "
+            "use strategy='allgather' on ragged meshes")
+    return n.bit_length() - 1
+
+
+def resolve_strategy(strategy: str, hierarchical: bool = False) -> str:
+    """Normalize the legacy ``hierarchical=True`` flag into the strategy
+    vocabulary (single source of the precedence rule for every layer and
+    CLI): it promotes the default ``"allgather"`` only — an explicitly
+    chosen strategy always wins.  Raises on unknown strategies."""
+    if hierarchical and strategy == "allgather":
+        return "hierarchical"
+    if strategy not in STRATEGIES:
+        raise ValueError(f"unknown strategy {strategy!r}; have {STRATEGIES}")
+    return strategy
+
+
+def strategy_wire_pairs(strategy: str, world: int, n_pods: int = 1) -> int:
+    """Number of ``(k_cap,)`` codec pairs a worker moves per leaf row.
+
+    The compile-time wire-volume model behind the ``comm_bits_sparse`` /
+    ``wire_bytes`` metrics and ``benchmarks/table2_scaling.py``:
+
+      allgather     ``W``               (every worker's pair lands on
+                                        every worker)
+      hierarchical  ``W_inner + P_pod`` (pod gather + pod-mean gather)
+      gtopk         ``log2(W)``         (one pair sent per halving round)
+    """
+    if strategy == "gtopk":
+        return _log2_exact(world)
+    if strategy == "hierarchical":
+        return max(1, world // n_pods) + n_pods
+    if strategy == "allgather":
+        return world
+    raise ValueError(f"unknown strategy {strategy!r}; have {STRATEGIES}")
+
+
+def encode_rows_topk(dense_rows: jax.Array, k_cap: int, codec_dtype=None):
+    """Re-encode a dense ``(model_size, d_row)`` partial as fixed-capacity
+    ``(model_size, k_cap)`` codec pairs — the gTop-k merge re-selection.
+
+    Per row: exact top-``k_cap`` by magnitude.  When a row holds fewer
+    than ``k_cap`` nonzeros the surplus slots carry real (non-sentinel)
+    indices with value 0 — decode scatters zeros, so they are harmless
+    padding; when it holds more, the smallest-magnitude surplus is
+    dropped and the caller must fold ``dense_rows - decode(result)``
+    back into a residual to keep Eq. (2) conservation.  ``codec_dtype``
+    down-casts the value half of the wire exactly like
+    ``compress_worker``.
+    """
+    def enc(row):
+        _, idx = jax.lax.top_k(jnp.abs(row), k_cap)
+        idx = idx.astype(jnp.int32)
+        return row[idx], idx
+
+    values, indices = jax.vmap(enc)(dense_rows)
+    if codec_dtype is not None:
+        values = values.astype(codec_dtype)
+    return values, indices
+
+
+def gtopk_round_plan(axis_sizes):
+    """Static recursive-doubling schedule over the joint data world.
+
+    ``axis_sizes`` are the data-axis sizes in mesh order (e.g. ``(pod,
+    data)``); the joint rank is row-major, so the *last* axis carries the
+    low bits and halving walks axes from last to first.  Returns
+    ``[(axis_pos, xor_mask, group_size), ...]`` — one entry per round,
+    where ``group_size = 2**round`` is how many workers already share an
+    identical partial when the round starts (the divisor for crediting
+    that round's re-selection drop exactly once across replicas).
+
+    Every axis size must be a power of two (raises otherwise).
+    """
+    plan = []
+    group = 1
+    for pos in range(len(axis_sizes) - 1, -1, -1):
+        n = axis_sizes[pos]
+        _log2_exact(n, f"data axis size (axis {pos})")
+        mask = 1
+        while mask < n:
+            plan.append((pos, mask, group))
+            group *= 2
+            mask *= 2
+    return plan
+
+
+def _gtopk_reduce(values, indices, axes, d_row: int, k_cap: int,
+                  codec_dtype=None, dtype=jnp.float32):
+    """Recursive-doubling pruned-sum of every worker's codec pairs.
+
+    Runs inside the shard_map manual region.  Each round: re-encode the
+    local dense partial (top-``k_cap`` per row), exchange the codec with
+    the XOR partner via a single-axis ppermute, decode-add.  After
+    ``log2(W)`` rounds every worker holds the identical pruned sum.
+
+    Returns ``(dense_sum, drop)``, both ``(model_size, d_row)``:
+    ``dense_sum`` is the merged (pruned) sum of all workers'
+    contributions, ``drop`` this worker's residual credit — each merge
+    drop divided by the number of workers that performed that identical
+    merge, so summing ``drop`` over the world recovers the total dropped
+    mass exactly (DESIGN.md §7).
+    """
+    sizes = [compat.axis_size(a) for a in axes]
+    plan = gtopk_round_plan(sizes)
+    dense = _decode_rows(values, indices, d_row, dtype)
+    drop = jnp.zeros_like(dense)
+    for r, (pos, mask, group) in enumerate(plan):
+        if r == 0:
+            # the worker's own pair already IS the top-k_cap encoding of
+            # its partial (<= k_cap duplicate-free slots, values already
+            # wire-cast), so the round-0 re-encode would reproduce it
+            # with drop == 0 — send it as-is
+            v, i, sent = values, indices, dense
+        else:
+            v, i = encode_rows_topk(dense, k_cap, codec_dtype)
+            sent = _decode_rows(v, i, d_row, dtype)
+            drop = drop + (dense - sent) / group
+        perm = [(j, j ^ mask) for j in range(sizes[pos])]
+        rv = compat.ppermute(v, axes[pos], perm)
+        ri = compat.ppermute(i, axes[pos], perm)
+        dense = sent + _decode_rows(rv, ri, d_row, dtype)
+    return dense, drop
+
+
+def gtopk_simulate(partials, k_cap: int, codec_dtype=None):
+    """Single-process reference of ``_gtopk_reduce`` (no mesh, no
+    collectives): the same XOR-partner merge tree over a list of
+    ``(model_size, d_row)`` dense partials, one per worker.
+
+    Returns ``(final, drops)`` — ``final`` the pruned sum every worker
+    converges to, ``drops`` the per-worker residual credits.  Operation
+    order matches the distributed path exactly (own decoded codec +
+    received decoded codec), so the distributed result must agree to
+    float tolerance; used as the equivalence oracle in
+    tests/_dist_check.py and tests/test_dist_aggregate.py.
+    """
+    W = len(partials)
+    _log2_exact(W)
+    d_row = partials[0].shape[-1]
+    dtype = partials[0].dtype
+    partials = list(partials)
+    drops = [jnp.zeros_like(partials[0]) for _ in range(W)]
+    mask, group = 1, 1
+    while mask < W:
+        sent = []
+        for w in range(W):
+            v, i = encode_rows_topk(partials[w], k_cap, codec_dtype)
+            sent.append(_decode_rows(v, i, d_row, dtype))
+            drops[w] = drops[w] + (partials[w] - sent[w]) / group
+        partials = [sent[w] + sent[w ^ mask] for w in range(W)]
+        mask *= 2
+        group *= 2
+    return partials[0], drops
+
+
+# ---------------------------------------------------------------------------
 # mesh-level aggregation (call inside shard_map, manual over data axes)
 # ---------------------------------------------------------------------------
 
@@ -165,10 +354,18 @@ def _gather_mean(values, indices, axis, n: int, d_row: int, dtype):
 
 def aggregate_compressed(grads, resid, spec: CompressorSpec, ratio: float,
                          data_axes, model_axis: str, model_size: int, key, *,
+                         strategy: str = "allgather",
                          hierarchical: bool = False, resid2=None,
                          world: int = 1, codec_dtype=None,
                          momentum_correction: float = 0.0):
     """Eq. (2) sparse aggregation of a gradient pytree.
+
+    ``strategy`` picks the wire pattern (module docstring, DESIGN.md §3,
+    §7): ``"allgather"`` (flat, O(W) pairs), ``"hierarchical"``
+    (two-level pod -> global, needs ``resid2`` and >= 2 data axes — falls
+    back to flat otherwise), or ``"gtopk"`` (recursive doubling, O(log W)
+    pairs, needs power-of-two data-axis sizes).  ``hierarchical=True`` is
+    the legacy spelling of ``strategy="hierarchical"``.
 
     Returns ``(agg, new_resid, new_resid2, metrics)``; ``agg`` has the
     gradient's tree/shape/dtype, residual trees are flat-padded like
@@ -178,18 +375,31 @@ def aggregate_compressed(grads, resid, spec: CompressorSpec, ratio: float,
     """
     axes = tuple(data_axes)
     mc = float(momentum_correction)
+    strategy = resolve_strategy(strategy, hierarchical)
     # without a second residual the two-level path cannot run; fall back
     # to the flat gather over ALL data axes rather than silently dropping
     # the outer (pod) contribution
-    hier = bool(hierarchical) and len(axes) > 1 and resid2 is not None
+    hier = (strategy == "hierarchical" and len(axes) > 1
+            and resid2 is not None)
+    if strategy == "hierarchical" and not hier:
+        strategy = "allgather"
+    gtopk = strategy == "gtopk"
+    if gtopk:
+        # the reducer's round count must match the actual mesh, so derive
+        # the world from the bound axes rather than trusting the caller's
+        # ``world`` (whose default of 1 would silently skip the rounds)
+        world = 1
+        for a in axes:
+            world *= compat.axis_size(a)
+        _log2_exact(world)
     if mc > 0.0 and hier:
         raise ValueError("momentum_correction reuses resid2 as the DGC "
-                         "velocity state; combine it with the flat path, "
-                         "not hierarchical aggregation")
+                         "velocity state; combine it with the flat or "
+                         "gtopk path, not hierarchical aggregation")
     if mc > 0.0 and resid2 is None:
         raise ValueError("momentum_correction needs a velocity state: "
                          "allocate resid2 via init_train_state(..., "
-                         "hierarchical=True)")
+                         "strategy='hierarchical')")
     use_v = mc > 0.0
 
     if hier:
@@ -221,9 +431,18 @@ def aggregate_compressed(grads, resid, spec: CompressorSpec, ratio: float,
         values, indices, new_e, new_v = compress_worker(
             g, e, spec, ratio, model_size, lkey, codec_dtype=codec_dtype,
             momentum=mc if use_v else 0.0, v=r2 if use_v else None)
-        mean = _gather_mean(values, indices, inner_axes, n_inner, d_row,
-                            jnp.float32)
         nnz_local += codec.nnz(indices).astype(jnp.float32)
+
+        if gtopk:
+            dense_sum, merge_drop = _gtopk_reduce(
+                values, indices, axes, d_row, k_cap, codec_dtype)
+            mean = dense_sum / world
+            # mass pruned by the merge re-selections returns to this
+            # worker's residual (scaled so the world sums it exactly once)
+            new_e = (new_e + merge_drop.reshape(-1).astype(new_e.dtype))
+        else:
+            mean = _gather_mean(values, indices, inner_axes, n_inner,
+                                d_row, jnp.float32)
 
         if hier:
             # second level: compress the pod-mean against resid2 and
@@ -250,7 +469,7 @@ def aggregate_compressed(grads, resid, spec: CompressorSpec, ratio: float,
         new_r2_leaves.append(new_r2)
 
         pair_bits = model_size * k_cap * (val_bits + 32)
-        levels = n_inner + (n_pods if hier else 0)
+        levels = strategy_wire_pairs(strategy, world, n_pods)
         bits_sparse += float(levels * pair_bits)
         bits_dense += float(2 * d * jnp.dtype(g.dtype).itemsize * 8)
         d_total += d

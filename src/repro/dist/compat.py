@@ -61,3 +61,21 @@ def axis_size(axis_name) -> int:
     manual region.  ``psum`` of a python literal constant-folds to the axis
     size without emitting a collective."""
     return jax.lax.psum(1, axis_name)
+
+
+def ppermute(x, axis_name: str, perm):
+    """``lax.ppermute`` pinned through the compat layer.
+
+    The gTop-k reducer (dist/aggregate.py) runs ``log2(P)`` rounds of a
+    single-axis source->dest permutation over one data axis per round.
+    On modern jax the data axes are the manual axes of a partial-auto
+    ``shard_map``; under the 0.4.x full-manual fallback *every* mesh axis
+    is manual, and a permutation naming one bound axis is legal in both
+    regimes — positions along all other axes exchange independently.
+
+    ``perm`` is a sequence of ``(source, dest)`` index pairs along
+    ``axis_name``; positions missing as a destination receive zeros
+    (never the case for the XOR pairings the reducer emits, which are
+    involutions covering every index).
+    """
+    return jax.lax.ppermute(x, axis_name, perm)

@@ -26,6 +26,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 from repro.configs import (ARCHS, INPUT_SHAPES, applicable, get_config,  # noqa: E402
                            input_specs)
 from repro.dist import sharding as shd  # noqa: E402
+from repro.dist.aggregate import resolve_strategy  # noqa: E402
 from repro.launch import hlo_cost  # noqa: E402
 from repro.launch import roofline as rl  # noqa: E402
 from repro.launch.mesh import (data_axes_of, data_world_size,  # noqa: E402
@@ -54,8 +55,9 @@ def _bf16(cfg):
                                activation_dtype=DTYPE)
 
 
-def lower_train(cfg, mesh, shape, compressor, hierarchical=False,
-                ratio=0.001, codec_dtype=None):
+def lower_train(cfg, mesh, shape, compressor, strategy="allgather",
+                hierarchical=False, ratio=0.001, codec_dtype=None):
+    strategy = resolve_strategy(strategy, hierarchical)
     data_axes = data_axes_of(mesh)
     joint = data_axes if len(data_axes) > 1 else data_axes[0]
     msize = model_axis_size(mesh)
@@ -68,7 +70,7 @@ def lower_train(cfg, mesh, shape, compressor, hierarchical=False,
         lambda p: init_train_state(
             p, opt, workers=workers, model_size=msize,
             with_residual=compressor not in (None, "none"),
-            hierarchical=hierarchical, resid_dtype=jnp.bfloat16),
+            strategy=strategy, resid_dtype=jnp.bfloat16),
         pshapes)
 
     pspecs = shd.param_specs(pshapes, "model", msize)
@@ -95,7 +97,7 @@ def lower_train(cfg, mesh, shape, compressor, hierarchical=False,
 
     step = make_train_step(cfg, mesh, opt, constant(0.01),
                            compressor=compressor, ratio=ratio,
-                           hierarchical=hierarchical, remat=True,
+                           strategy=strategy, remat=True,
                            codec_dtype=codec_dtype)
     return step.lower(state_in, batch_in)
 
@@ -139,7 +141,10 @@ def lower_decode(cfg, mesh, shape):
 def run_one(arch: str, shape_name: str, multi_pod: bool, compressor: str,
             hierarchical: bool = False, ratio: float = 0.001,
             codec_dtype=None, hlo_dir: str = "experiments/hlo",
-            serve_mode: str = "2d", shard_activations: bool = False) -> dict:
+            serve_mode: str = "2d", shard_activations: bool = False,
+            strategy: str = "allgather") -> dict:
+    strategy = resolve_strategy(strategy, hierarchical)
+    hierarchical = strategy == "hierarchical"
     cfg = _bf16(get_config(arch))
     if shard_activations:
         import dataclasses
@@ -149,7 +154,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, compressor: str,
     rec = {"arch": arch, "shape": shape_name,
            "mesh": "2x16x16" if multi_pod else "16x16",
            "kind": shape.kind, "compressor": compressor,
-           "hierarchical": hierarchical,
+           "strategy": strategy, "hierarchical": hierarchical,
            "codec_dtype": str(codec_dtype) if codec_dtype else None,
            "serve_mode": serve_mode, "shard_activations": shard_activations}
     if not ok:
@@ -161,7 +166,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, compressor: str,
     try:
         if shape.kind == "train":
             lowered = lower_train(cfg, mesh, shape, compressor,
-                                  hierarchical=hierarchical, ratio=ratio,
+                                  strategy=strategy, ratio=ratio,
                                   codec_dtype=codec_dtype)
         elif shape.kind == "prefill":
             lowered = lower_prefill(cfg, mesh, shape, serve_mode=serve_mode)
@@ -176,7 +181,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, compressor: str,
         if hlo_dir:
             os.makedirs(hlo_dir, exist_ok=True)
             tag = (f"{arch}_{shape_name}_{rec['mesh']}_{compressor}"
-                   f"{'_hier' if hierarchical else ''}"
+                   f"{'_' + strategy if strategy != 'allgather' else ''}"
                    f"{'_' + rec['codec_dtype'] if rec['codec_dtype'] else ''}"
                    f"{'_servemodelonly' if serve_mode != '2d' else ''}"
                    f"{'_actshard' if shard_activations else ''}")
@@ -228,7 +233,10 @@ def main():
     ap.add_argument("--mesh", default="single", choices=["single", "multi",
                                                          "both"])
     ap.add_argument("--compressor", default="gaussiank")
-    ap.add_argument("--hierarchical", action="store_true")
+    ap.add_argument("--strategy", default="allgather",
+                    choices=["allgather", "gtopk", "hierarchical"])
+    ap.add_argument("--hierarchical", action="store_true",
+                    help="deprecated alias for --strategy hierarchical")
     ap.add_argument("--ratio", type=float, default=0.001)
     ap.add_argument("--codec-dtype", default=None,
                     help="wire dtype for codec values, e.g. bfloat16")
@@ -248,8 +256,11 @@ def main():
         with open(args.out) as f:
             results = json.load(f)
     cdt = jnp.dtype(args.codec_dtype) if args.codec_dtype else None
+    strategy = resolve_strategy(args.strategy, args.hierarchical)
     done = {(r["arch"], r["shape"], r["mesh"], r.get("compressor"),
-             r.get("hierarchical", False), r.get("codec_dtype"),
+             r.get("strategy",
+                   "hierarchical" if r.get("hierarchical") else "allgather"),
+             r.get("codec_dtype"),
              r.get("serve_mode", "2d"), r.get("shard_activations", False))
             for r in results if r.get("status") in ("OK", "SKIP")}
 
@@ -257,16 +268,16 @@ def main():
         for shape in shapes:
             for mp in meshes:
                 key = (arch, shape, "2x16x16" if mp else "16x16",
-                       args.compressor, args.hierarchical,
+                       args.compressor, strategy,
                        str(cdt) if cdt else None, args.serve_mode,
                        args.shard_activations)
                 if key in done:
                     continue
                 print(f"== {arch} x {shape} x {key[2]} "
-                      f"[{args.compressor}{' hier' if args.hierarchical else ''}]",
+                      f"[{args.compressor} {strategy}]",
                       flush=True)
                 rec = run_one(arch, shape, mp, args.compressor,
-                              args.hierarchical, args.ratio,
+                              ratio=args.ratio, strategy=strategy,
                               codec_dtype=cdt, serve_mode=args.serve_mode,
                               shard_activations=args.shard_activations)
                 status = rec["status"]

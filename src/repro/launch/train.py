@@ -26,7 +26,14 @@ def parse_args(argv=None):
     ap.add_argument("--compressor", default="gaussiank",
                     help="none|topk|randk|gaussiank|gaussiank2|dgck|trimmedk")
     ap.add_argument("--ratio", type=float, default=0.001)
-    ap.add_argument("--hierarchical", action="store_true")
+    ap.add_argument("--strategy", default="allgather",
+                    choices=["allgather", "gtopk", "hierarchical"],
+                    help="sparse wire pattern: flat all-gather (O(P) "
+                         "pairs), gTop-k recursive doubling (O(log P), "
+                         "power-of-two data axes), or two-level pod "
+                         "reduction")
+    ap.add_argument("--hierarchical", action="store_true",
+                    help="deprecated alias for --strategy hierarchical")
     ap.add_argument("--optimizer", default="sgd",
                     choices=["sgd", "adamw"])
     ap.add_argument("--lr", type=float, default=0.1)
@@ -78,22 +85,25 @@ def main(argv=None):
                                         max(args.steps // 2, 1))}[
         args.schedule]()
 
+    from repro.dist.aggregate import resolve_strategy
+
+    strategy = resolve_strategy(args.strategy, args.hierarchical)
     params = init_params(cfg, jax.random.PRNGKey(args.seed))
     state = init_train_state(
         params, opt, workers=data_world_size(mesh),
         model_size=model_axis_size(mesh),
         with_residual=args.compressor not in ("none",),
-        hierarchical=args.hierarchical)
+        strategy=strategy)
     if args.resume:
         state = load_state(args.resume, state)
 
     step = make_train_step(cfg, mesh, opt, lr_fn,
                            compressor=args.compressor, ratio=args.ratio,
-                           hierarchical=args.hierarchical,
+                           strategy=strategy,
                            remat=not args.smoke, seed=args.seed)
 
     print(f"arch={cfg.name} compressor={args.compressor} ratio={args.ratio} "
-          f"mesh={args.mesh} steps={args.steps}")
+          f"strategy={strategy} mesh={args.mesh} steps={args.steps}")
     t0 = time.time()
     for i in range(args.steps):
         batch = batch_for(cfg, i, global_batch=args.batch, seq_len=args.seq,

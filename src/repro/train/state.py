@@ -9,14 +9,19 @@ from typing import Any, Dict
 import jax
 import jax.numpy as jnp
 
-from repro.dist.aggregate import init_residuals
+from repro.dist.aggregate import init_residuals, resolve_strategy
 from repro.optim import Optimizer
 
 
 def init_train_state(params, optimizer: Optimizer, *, workers: int,
                      model_size: int, with_residual: bool = True,
-                     hierarchical: bool = False,
+                     hierarchical: bool = False, strategy: str = "allgather",
                      resid_dtype=jnp.float32) -> Dict[str, Any]:
+    """``strategy="hierarchical"`` (or the legacy ``hierarchical=True``)
+    allocates the second residual ``resid2`` the two-level path
+    compresses the pod-mean against; ``"allgather"`` and ``"gtopk"``
+    need only the per-worker ``resid`` (the gTop-k merge drops are
+    credited into it directly — dist/aggregate.py)."""
     state: Dict[str, Any] = {
         "params": params,
         "opt": optimizer.init(params),
@@ -26,7 +31,7 @@ def init_train_state(params, optimizer: Optimizer, *, workers: int,
         one = init_residuals(params, model_size, resid_dtype)
         state["resid"] = jax.tree.map(
             lambda e: jnp.zeros((workers,) + e.shape, e.dtype), one)
-        if hierarchical:
+        if resolve_strategy(strategy, hierarchical) == "hierarchical":
             state["resid2"] = jax.tree.map(
                 lambda e: jnp.zeros((workers,) + e.shape, e.dtype), one)
     return state

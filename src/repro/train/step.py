@@ -8,9 +8,11 @@ Structure (DESIGN.md §4):
        ├─ jax.value_and_grad(loss)   per-worker grads on the local batch;
        │                             params/activations GSPMD-sharded
        │                             over "model" transparently
-       ├─ aggregate_compressed       local per-shard selection + sparse
-       │                             all_gather over the data axes
-       │                             (or lax.pmean for Dense-SGD)
+       ├─ aggregate_compressed       local per-shard selection + the
+       │                             chosen wire strategy over the data
+       │                             axes: sparse all_gather, gTop-k
+       │                             ppermute rounds, or two-level pod
+       │                             reduction (lax.pmean for Dense-SGD)
        └─ optimizer.update           identical on every worker
 """
 from __future__ import annotations
@@ -58,14 +60,20 @@ def worker_index(data_axes):
 
 def make_train_step(cfg, mesh, optimizer: Optimizer, lr_fn: Callable,
                     *, compressor: Optional[str] = "gaussiank",
-                    ratio: float = 0.001, hierarchical: bool = False,
+                    ratio: float = 0.001, strategy: str = "allgather",
+                    hierarchical: bool = False,
                     remat: bool = True, seed: int = 0,
                     loss_fn: Optional[Callable] = None, codec_dtype=None,
                     momentum_correction: float = 0.0):
     """Returns (step_fn, in_specs, out_specs).  ``step_fn(state, batch) ->
     (state, metrics)`` is already jit+shard_map wrapped for ``mesh``.
-    ``compressor=None``/"none" gives the Dense-SGD baseline."""
+    ``compressor=None``/"none" gives the Dense-SGD baseline.
+
+    ``strategy`` selects the sparse wire pattern — ``"allgather"``,
+    ``"gtopk"`` or ``"hierarchical"`` (see dist/aggregate.py; the legacy
+    ``hierarchical=True`` flag maps to ``strategy="hierarchical"``)."""
     data_axes = data_axes_of(mesh)
+    strategy = aggregate.resolve_strategy(strategy, hierarchical)
     joint = _joint(data_axes)
     msize = model_axis_size(mesh)
     dense = compressor in (None, "none")
@@ -94,7 +102,7 @@ def make_train_step(cfg, mesh, optimizer: Optimizer, lr_fn: Callable,
             key = jax.random.fold_in(key, worker_index(data_axes))
             agg, nr, nr2, agg_metrics = aggregate.aggregate_compressed(
                 grads, resid, spec, ratio, data_axes, "model", msize, key,
-                hierarchical=hierarchical, resid2=resid2,
+                strategy=strategy, resid2=resid2,
                 world=data_world_size(mesh), codec_dtype=codec_dtype,
                 momentum_correction=momentum_correction)
             new_resid = jax.tree.map(lambda e: e[None], nr)

@@ -5,6 +5,8 @@ no mesh needed — so a compressor or codec regression is caught here
 before it shows up as a (much harder to debug) distributed-training
 numerics drift in tests/test_distributed.py.
 """
+import math
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -117,6 +119,120 @@ def test_strided_sample_distinct_and_in_range():
         assert idx.shape == (s,)
         assert idx.min() >= 0 and idx.max() < d
         assert len(set(idx.tolist())) == s, "duplicate sample indices"
+
+
+# ---------------------------------------------------------------------------
+# gTop-k recursive-doubling merge (pure pieces — the mesh path is checked
+# against these exact functions in tests/_dist_check.py::check_gtopk)
+# ---------------------------------------------------------------------------
+
+
+def _worker_partials(name, W, msize, ratio, shape=(37, 11), seed0=0):
+    """Per-worker compress + decode: the inputs the merge tree consumes."""
+    spec = get_compressor(name)
+    g = [_leaf(seed0 + w, shape) for w in range(W)]
+    d_pad, d_row = aggregate.flat_dims(g[0].size, msize)
+    e = [_leaf(100 + w, (d_pad,), 0.001) for w in range(W)]
+    outs = [aggregate.compress_worker(g[w], e[w], spec, ratio, msize,
+                                      jax.random.PRNGKey(w))
+            for w in range(W)]
+    _, _, _, k_cap = aggregate.leaf_plan(g[0].size, msize, ratio, spec)
+    partials = [jax.vmap(lambda v, i: codec.decode(v, i, d_row))(o[0], o[1])
+                for o in outs]
+    u = [e[w] + jnp.pad(g[w].reshape(-1), (0, d_pad - g[w].size))
+         for w in range(W)]
+    return partials, outs, u, k_cap, d_row
+
+
+@pytest.mark.parametrize("name", ["topk", "gaussiank"])
+@pytest.mark.parametrize("W,model_size", [(4, 2), (8, 1)])
+def test_gtopk_simulation_conserves_u(name, W, model_size):
+    """Eq. (2) conservation through the whole merge tree: the pruned sum
+    plus every worker's residual (local drop + credited merge drops)
+    reconstructs sum_w u_w exactly — no mass is created or destroyed."""
+    partials, outs, u, k_cap, _ = _worker_partials(name, W, model_size, 0.02)
+    final, drops = aggregate.gtopk_simulate(partials, k_cap)
+    lhs = sum(u)
+    rhs = (final.reshape(-1) + sum(o[2] for o in outs)
+           + sum(d.reshape(-1) for d in drops))
+    np.testing.assert_allclose(np.asarray(rhs), np.asarray(lhs),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_gtopk_matches_allgather_when_supports_align():
+    """When every worker selects the same coordinates (identical u), no
+    merge re-selection ever overflows k_cap, so the pruned sum equals the
+    plain decode-sum the allgather path computes."""
+    spec = get_compressor("topk")
+    W, msize, ratio = 4, 2, 0.02
+    g = _leaf(0, (37, 11))
+    d_pad, d_row = aggregate.flat_dims(g.size, msize)
+    outs = [aggregate.compress_worker(g, jnp.zeros((d_pad,)), spec, ratio,
+                                      msize, None) for _ in range(W)]
+    _, _, _, k_cap = aggregate.leaf_plan(g.size, msize, ratio, spec)
+    partials = [jax.vmap(lambda v, i: codec.decode(v, i, d_row))(o[0], o[1])
+                for o in outs]
+    final, drops = aggregate.gtopk_simulate(partials, k_cap)
+    allgather_sum = sum(partials)
+    np.testing.assert_allclose(np.asarray(final), np.asarray(allgather_sum),
+                               rtol=1e-6, atol=1e-8)
+    for d in drops:
+        np.testing.assert_allclose(np.asarray(d), 0.0, atol=1e-8)
+
+
+def test_encode_rows_topk_contract():
+    """The merge re-encoder: lossless when a row fits in k_cap; otherwise
+    keeps the k_cap largest magnitudes and the caller-visible difference
+    is exactly the dropped (smallest) mass — the residual credit."""
+    dense = jnp.zeros((1, 16)).at[0, jnp.array([1, 5, 9])].set(
+        jnp.array([3.0, -7.0, 1.0]))
+    v, i = aggregate.encode_rows_topk(dense, 5)
+    dec = jax.vmap(lambda vv, ii: codec.decode(vv, ii, 16))(v, i)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(dense))
+
+    v, i = aggregate.encode_rows_topk(dense, 2)  # overflow: drop |1.0|
+    dec = jax.vmap(lambda vv, ii: codec.decode(vv, ii, 16))(v, i)
+    drop = np.asarray(dense - dec)
+    assert drop[0, 9] == 1.0 and np.count_nonzero(drop) == 1
+    # wire down-cast error is part of the caller's drop credit
+    v, i = aggregate.encode_rows_topk(dense, 5, codec_dtype=jnp.bfloat16)
+    assert v.dtype == jnp.bfloat16
+
+
+def test_gtopk_round_plan_multi_axis():
+    """Halving walks the joint rank from the low (last-axis) bits up, one
+    single-axis XOR round per bit, doubling the merged-group size."""
+    assert aggregate.gtopk_round_plan([4]) == [(0, 1, 1), (0, 2, 2)]
+    assert aggregate.gtopk_round_plan([2, 4]) == [
+        (1, 1, 1), (1, 2, 2), (0, 1, 4)]
+    assert aggregate.gtopk_round_plan([1]) == []
+    with pytest.raises(ValueError):
+        aggregate.gtopk_round_plan([3])
+
+
+def test_resolve_strategy_precedence():
+    """The legacy flag only promotes the default; an explicitly chosen
+    strategy always wins (one rule for every layer and CLI)."""
+    assert aggregate.resolve_strategy("allgather", True) == "hierarchical"
+    assert aggregate.resolve_strategy("gtopk", True) == "gtopk"
+    assert aggregate.resolve_strategy("hierarchical") == "hierarchical"
+    assert aggregate.resolve_strategy("allgather") == "allgather"
+    with pytest.raises(ValueError):
+        aggregate.resolve_strategy("bogus")
+
+
+def test_strategy_wire_pairs_gtopk_strictly_fewer():
+    """The acceptance bound: for P >= 4 at equal k_cap the gTop-k wire
+    volume (log2 P pairs) is strictly below the all-gather's (P pairs)."""
+    for P in (4, 8, 16, 64, 256):
+        gt = aggregate.strategy_wire_pairs("gtopk", P)
+        ag = aggregate.strategy_wire_pairs("allgather", P)
+        assert gt == int(math.log2(P)) and gt < ag
+    assert aggregate.strategy_wire_pairs("hierarchical", 16, 4) == 8
+    with pytest.raises(ValueError):
+        aggregate.strategy_wire_pairs("gtopk", 12)
+    with pytest.raises(ValueError):
+        aggregate.strategy_wire_pairs("bogus", 4)
 
 
 def test_cache_specs_divisibility_guard():

@@ -29,6 +29,16 @@ def test_eq2_semantics_match_simulation():
 
 
 @pytest.mark.slow
+def test_gtopk_semantics_match_simulation():
+    """8-device gTop-k strategy == single-process simulation of the
+    recursive-doubling pruned-sum (aggregation bit-match + 3-step
+    training within the Eq.-2 budget), plus conservation and the
+    O(log W) wire-volume accounting."""
+    out = _run("gtopk")
+    assert "GTOPK OK" in out
+
+
+@pytest.mark.slow
 def test_dense_dp_matches_single_device():
     out = _run("dense")
     assert "DENSE OK" in out

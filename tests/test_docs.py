@@ -1,0 +1,47 @@
+"""Documentation front-door checks (tier-1 twin of the CI ``docs`` job).
+
+The link checker itself is exercised on a synthetic broken file so a
+regex regression cannot silently turn the CI job into a no-op.
+"""
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "tools"))
+
+from check_links import broken_links  # noqa: E402
+
+DOCS = ["README.md", "DESIGN.md"]
+
+
+def test_repo_docs_have_no_broken_relative_links():
+    for doc in DOCS:
+        assert (REPO / doc).exists(), f"{doc} missing"
+        assert broken_links(REPO / doc) == [], doc
+
+
+def test_checker_catches_broken_and_skips_external(tmp_path):
+    md = tmp_path / "doc.md"
+    (tmp_path / "real.md").write_text("x")
+    md.write_text(
+        "[ok](real.md) [ok2](real.md#sec) [web](https://x.y/z)\n"
+        "[anchor](#local) [gone](missing.md) [gone2](sub/nope.py)\n"
+        "[O(2^k) caret text](caret.md)\n")
+    bad = broken_links(md)
+    assert [t for _, t in bad] == ["missing.md", "sub/nope.py", "caret.md"]
+    assert [ln for ln, _ in bad] == [2, 2, 3]
+
+
+def test_cli_exit_codes(tmp_path):
+    ok = tmp_path / "ok.md"
+    ok.write_text("[self](ok.md)\n")
+    bad = tmp_path / "bad.md"
+    bad.write_text("[gone](nope.md)\n")
+    script = REPO / "tools" / "check_links.py"
+    r = subprocess.run([sys.executable, str(script), str(ok)],
+                       capture_output=True, text=True)
+    assert r.returncode == 0, r.stdout + r.stderr
+    r = subprocess.run([sys.executable, str(script), str(bad)],
+                       capture_output=True, text=True)
+    assert r.returncode == 1 and "nope.md" in r.stdout

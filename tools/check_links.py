@@ -1,0 +1,63 @@
+#!/usr/bin/env python3
+"""Relative-link checker for the repo's markdown docs (stdlib only).
+
+    python tools/check_links.py README.md DESIGN.md
+
+Extracts every inline markdown link ``[text](target)`` and verifies that
+relative targets exist on disk, resolved against the markdown file's own
+directory (anchors are stripped; pure-anchor, absolute-URL and mailto
+links are skipped).  Exits 1 listing every broken link — the CI ``docs``
+job runs this over README.md and DESIGN.md so the documentation front
+door cannot rot silently.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# inline links only; targets never contain whitespace in our docs.
+_LINK = re.compile(r"\[[^\]\[]*\]\(([^)\s]+)\)")
+_SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def broken_links(md_path: Path) -> list[tuple[int, str]]:
+    """(line number, target) for every relative link that resolves to a
+    path that does not exist."""
+    bad = []
+    base = md_path.parent
+    for lineno, line in enumerate(
+            md_path.read_text(encoding="utf-8").splitlines(), 1):
+        for target in _LINK.findall(line):
+            if target.startswith(_SKIP_PREFIXES):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not (base / rel).exists():
+                bad.append((lineno, target))
+    return bad
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print("usage: check_links.py FILE.md [FILE.md ...]", file=sys.stderr)
+        return 2
+    failures = 0
+    for name in argv:
+        path = Path(name)
+        if not path.exists():
+            print(f"{name}: file not found")
+            failures += 1
+            continue
+        bad = broken_links(path)
+        for lineno, target in bad:
+            print(f"{name}:{lineno}: broken relative link -> {target}")
+        failures += len(bad)
+        if not bad:
+            print(f"{name}: OK")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
