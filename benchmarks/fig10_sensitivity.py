@@ -12,19 +12,18 @@ import numpy as np
 from benchmarks.common import simulate_sparsified_sgd
 
 
-def run():
+def run(smoke: bool = False):
     rows = []
+    workers, steps = (2, 30) if smoke else (8, 120)
     # Fig. 10: communicated elements vs configured k over training
     ratio = 0.005
     losses, accs, comm, _ = simulate_sparsified_sgd(
-        "gaussiank", workers=8, ratio=ratio, steps=120)
+        "gaussiank", workers=workers, ratio=ratio, steps=steps)
     import jax
     from repro.models.fnn import init_fnn
-    d_total = sum(x.size for x in jax.tree.leaves(
-        init_fnn(jax.random.PRNGKey(0))))
     k_conf = sum(max(1, int(np.ceil(ratio * s))) for s in
                  [x.size for x in jax.tree.leaves(
-                     init_fnn(jax.random.PRNGKey(0)))]) * 8
+                     init_fnn(jax.random.PRNGKey(0)))]) * workers
     early = np.mean(comm[:10]) / k_conf
     late = np.mean(comm[-10:]) / k_conf
     rows.append(("fig10/comm_ratio_early", 0.0,
@@ -33,9 +32,9 @@ def run():
                  f"selected/k={late:.2f}"))
     # Fig. 11: k sensitivity
     finals = {}
-    for r in (0.001, 0.005, 0.01):
+    for r in (0.005, 0.01) if smoke else (0.001, 0.005, 0.01):
         losses, accs, _, _ = simulate_sparsified_sgd(
-            "gaussiank", workers=8, ratio=r, steps=120)
+            "gaussiank", workers=workers, ratio=r, steps=steps)
         finals[r] = sum(accs[-10:]) / 10
         rows.append((f"fig11/gaussiank/ratio={r}", 0.0,
                      f"tail_acc={finals[r]:.4f}"))

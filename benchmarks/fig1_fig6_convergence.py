@@ -10,18 +10,19 @@ Claims checked:
 """
 from __future__ import annotations
 
-from benchmarks.common import simulate_sparsified_sgd, timeit
+from benchmarks.common import simulate_sparsified_sgd
 
 STEPS = 120
 RATIO = 0.005  # 0.001 needs many more steps on the small FNN; same regime
 
 
-def run():
+def run(smoke: bool = False):
     rows = []
     finals = {}
+    workers, steps = (4, 30) if smoke else (16, STEPS)
     for comp in ("none", "topk", "gaussiank", "randk"):
         losses, accs, comm, _ = simulate_sparsified_sgd(
-            comp, workers=16, ratio=RATIO, steps=STEPS)
+            comp, workers=workers, ratio=RATIO, steps=steps)
         tail_acc = sum(accs[-10:]) / 10
         finals[comp] = tail_acc
         rows.append((f"fig1_6/{comp}", 0.0,

@@ -26,13 +26,16 @@ def _shape_stats(hist):
     }
 
 
-def run():
+def run(smoke: bool = False):
     rows = []
-    iters = (20, 60, 100)
+    iters = (5, 15) if smoke else (20, 60, 100)
+    steps = 16 if smoke else 101
+    workers = 2 if smoke else 4
     _, _, _, hists_topk = simulate_sparsified_sgd(
-        "topk", workers=4, ratio=0.005, steps=101, collect_u_hist_at=iters)
+        "topk", workers=workers, ratio=0.005, steps=steps,
+        collect_u_hist_at=iters)
     _, _, _, hists_gk = simulate_sparsified_sgd(
-        "gaussiank", workers=4, ratio=0.005, steps=101,
+        "gaussiank", workers=workers, ratio=0.005, steps=steps,
         collect_u_hist_at=iters)
     bell = True
     for t in iters:

@@ -1,23 +1,54 @@
-"""Paper Fig. 4: selection-operator compute cost vs dimension.
+"""Paper Fig. 4: selection-operator compute cost vs dimension — extended
+with the fused error-feedback pipeline (DESIGN.md §8).
 
 The paper times Top_k / DGC_k / Gaussian_k on a V100; this container is
-CPU, so wall-clock here is a PROXY — the structural claim that transfers
-is the cost hierarchy: Gaussian_k (O(d) elementwise, no sort) beats
-DGC_k (sampled sort + candidate top-k) beats exact Top_k (full sort /
-top-k), and the gap widens with d.  We report both wall time and the
-sort-free/sort op-count character."""
+CPU, so wall-clock here is a PROXY — the structural claims that transfer
+are (a) the cost hierarchy: Gaussian_k (O(d) elementwise, no sort) beats
+DGC_k beats exact Top_k, and (b) the HBM-pass count of the Eq.-2
+compression hot path: the fused pipeline (one moments pass, one
+multi-threshold count pass, one compact+residual pass) versus the
+unfused composition of the same kernels (~8-9 leaf-sized passes).
+
+The module CLI (``--json``, used by the CI ``perf`` job) emits
+``BENCH_fig4.json`` (schema ``fig4/v1``: rows of
+``{shape, method, passes, ms}``), gated against
+``benchmarks/baselines/fig4.json`` via ``tools/check_perf.py``; the
+harness ``run()`` entry only reports rows so local benchmark sweeps
+never overwrite the committed reference artifact.  Pass counts for the kernel pipelines are
+measured by tracing the pipeline under ``ef_fused.count_passes``; the
+pure-jnp reference has no kernel pass accounting (``passes: null``).
+"""
 from __future__ import annotations
+
+import argparse
+import json
 
 import jax
 
 from benchmarks.common import timeit
-from repro.core import get_compressor
+from repro.core import compress_with_ef, get_compressor
+from repro.kernels.ef_fused import (choose_block, count_passes,
+                                    fused_compress_ef, unfused_compress_ef)
 from repro.kernels.histk import histk_select_kernel
 
+BENCH_JSON = "BENCH_fig4.json"
+SCHEMA = "fig4/v1"
 
-def run():
+# (selection-speed ds, EF-pipeline ds) per mode; 2^22 is the acceptance
+# shape for the fused-vs-unfused CPU wall-time claim.  The smoke run
+# uses the paper's delta x10 (k = d/100): at tiny d the per-block
+# expected counts otherwise fall below the staging floor and the
+# fused-vs-unfused margin degenerates into timer noise — the CI gate
+# needs the compaction-dominated regime the full shapes are in.
+_SELECT_DS = {False: (1_000_000, 4_000_000, 8_000_000),
+              True: (250_000,)}
+_EF_DS = {False: (2 ** 20, 2 ** 22), True: (2 ** 16, 2 ** 18)}
+_EF_KDIV = {False: 1000, True: 100}
+
+
+def _selection_rows(smoke: bool):
     rows = []
-    for d in (1_000_000, 4_000_000, 8_000_000):
+    for d in _SELECT_DS[smoke]:
         u = jax.random.normal(jax.random.PRNGKey(0), (d,)) * 0.01
         k = max(1, d // 1000)
         key = jax.random.PRNGKey(1)
@@ -28,11 +59,82 @@ def run():
             times[name] = timeit(fn, u, key, warmup=1, iters=2)
             rows.append((f"fig4/{name}/d={d}", round(times[name], 1),
                          f"k={k}"))
-        # beyond-paper histogram selector
-        fn = jax.jit(lambda u: histk_select_kernel(u, k))
+        # beyond-paper histogram selector (interpreter-sized blocks —
+        # the fixed 2048-lane tile is quadratic under interpret mode)
+        blk = choose_block(d)
+        fn = jax.jit(lambda u: histk_select_kernel(u, k, block=blk))
         times["histk"] = timeit(fn, u, warmup=1, iters=2)
         rows.append((f"fig4/histk/d={d}", round(times["histk"], 1),
                      f"k={k};beyond-paper"))
         rows.append((f"fig4/speedup/d={d}", 0.0,
-                     f"gaussiank_vs_topk={times['topk']/times['gaussiank']:.2f}x"))
+                     f"gaussiank_vs_topk="
+                     f"{times['topk'] / times['gaussiank']:.2f}x"))
     return rows
+
+
+def _ef_pipeline_rows(smoke: bool):
+    """Fused vs unfused EF compression: measured passes + wall time."""
+    rows, bench = [], []
+    iters = 2 if smoke else 3
+    for d in _EF_DS[smoke]:
+        k = max(1, d // _EF_KDIV[smoke])
+        g = jax.random.normal(jax.random.PRNGKey(2), (d,)) * 0.02
+        e = jax.random.normal(jax.random.PRNGKey(3), (d,)) * 0.01
+        for comp in ("gaussiank", "histk"):
+            for method, fn in (("fused", fused_compress_ef),
+                               ("unfused", unfused_compress_ef)):
+                with count_passes() as log:
+                    jax.block_until_ready(fn(g, e, comp, k))
+                jfn = jax.jit(lambda g, e, f=fn, c=comp: f(g, e, c, k))
+                ms = timeit(jfn, g, e, warmup=1, iters=iters) / 1e3
+                bench.append({"shape": d, "method": f"{comp}-{method}",
+                              "passes": log.total(), "ms": round(ms, 3)})
+                rows.append((f"fig4/ef-{comp}-{method}/d={d}",
+                             round(ms * 1e3, 1),
+                             f"k={k};passes={log.total()}"))
+        # pure-jnp oracle (no kernel pass accounting)
+        spec = get_compressor("gaussiank")
+        jfn = jax.jit(lambda g, e: compress_with_ef(g, spec, k, e=e,
+                                                    backend="reference"))
+        ms = timeit(jfn, g, e, warmup=1, iters=iters) / 1e3
+        bench.append({"shape": d, "method": "gaussiank-jnp",
+                      "passes": None, "ms": round(ms, 3)})
+        rows.append((f"fig4/ef-gaussiank-jnp/d={d}", round(ms * 1e3, 1),
+                     f"k={k}"))
+    return rows, bench
+
+
+def collect(smoke: bool = False):
+    rows = _selection_rows(smoke)
+    ef_rows, bench = _ef_pipeline_rows(smoke)
+    return rows + ef_rows, {"schema": SCHEMA, "smoke": smoke, "rows": bench}
+
+
+def run(smoke: bool = False):
+    # harness entry point: report only — the committed ./BENCH_fig4.json
+    # is a reference measurement, rewritten solely by an explicit
+    # `python -m benchmarks.fig4_selection_speed --json ...` (the CI
+    # perf job writes to its own workspace and uploads an artifact)
+    rows, data = collect(smoke)
+    rows.append((f"fig4/{BENCH_JSON}", 0.0,
+                 f"rows={len(data['rows'])};smoke={smoke};not-written"))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes (CI perf job)")
+    ap.add_argument("--json", default=BENCH_JSON,
+                    help=f"output path (default: {BENCH_JSON})")
+    args = ap.parse_args(argv)
+    rows, data = collect(args.smoke)
+    for r in rows:
+        print(",".join(str(x) for x in r), flush=True)
+    with open(args.json, "w") as f:
+        json.dump(data, f, indent=1)
+    print(f"wrote {args.json} ({len(data['rows'])} rows)")
+
+
+if __name__ == "__main__":
+    main()

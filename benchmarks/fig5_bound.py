@@ -8,17 +8,17 @@ paper bound tightens as k grows."""
 from __future__ import annotations
 
 import jax
-import numpy as np
 
 from benchmarks.common import simulate_sparsified_sgd
 from repro.core import bounds
 
 
-def run():
+def run(smoke: bool = False):
     rows = []
-    d = 100_000
+    d = 20_000 if smoke else 100_000
     u = jax.random.normal(jax.random.PRNGKey(0), (d,))
-    ks = [10, 100, 1000, 5000, 10_000, 30_000, 60_000, 90_000]
+    ks = ([10, 1000, 10_000] if smoke else
+          [10, 100, 1000, 5000, 10_000, 30_000, 60_000, 90_000])
     ok = True
     for k in ks:
         exact = float(bounds.gamma_exact(u, k))
@@ -29,8 +29,10 @@ def run():
                      f"exact={exact:.4f};paper={paper:.4f};"
                      f"classic={classic:.4f}"))
     # real gradients: collect u_t from a short TopK-SGD run (worker 0)
+    steps = 6 if smoke else 21
     _, _, _, hists = simulate_sparsified_sgd(
-        "topk", workers=4, ratio=0.01, steps=21, collect_u_hist_at=(20,))
+        "topk", workers=2 if smoke else 4, ratio=0.01, steps=steps,
+        collect_u_hist_at=(steps - 1,))
     rows.append(("fig5/bounds_hold_gaussian", 0.0, f"ok={ok}"))
     assert ok, "Theorem 1 ordering violated on Gaussian data"
     return rows

@@ -5,6 +5,10 @@ Each module runs in its own subprocess: the XLA-CPU JIT accumulates
 dylib state across many compilations in one process and eventually fails
 to materialize symbols; process isolation sidesteps it and makes module
 failures independent.
+
+``--smoke`` runs every module end-to-end on reduced shapes/steps (the
+CI ``bench-smoke`` contract: each module's ``run`` accepts
+``smoke=True``).
 """
 from __future__ import annotations
 
@@ -16,12 +20,12 @@ MODULES = ["fig5_bound", "fig2_histograms", "fig1_fig6_convergence",
            "fig4_selection_speed", "fig10_sensitivity", "table2_scaling"]
 
 
-def run_module(name: str) -> int:
+def run_module(name: str, smoke: bool = False) -> int:
     import importlib
     mod = importlib.import_module(f"benchmarks.{name}")
     t0 = time.time()
     try:
-        rows = mod.run()
+        rows = mod.run(smoke=smoke)
     except Exception as e:  # noqa: BLE001
         print(f"{name},0,ERROR:{type(e).__name__}:{e}", flush=True)
         return 1
@@ -33,13 +37,19 @@ def run_module(name: str) -> int:
 
 
 def main() -> None:
-    if len(sys.argv) > 1:
-        names = [m for m in MODULES if sys.argv[1] in m]
-        sys.exit(sum(run_module(n) for n in names))
+    args = sys.argv[1:]
+    smoke = "--smoke" in args
+    args = [a for a in args if a != "--smoke"]
+    if args:
+        names = [m for m in MODULES if args[0] in m]
+        sys.exit(sum(run_module(n, smoke) for n in names))
     print("name,us_per_call,derived", flush=True)
     failures = 0
     for name in MODULES:
-        r = subprocess.run([sys.executable, "-m", "benchmarks.run", name])
+        cmd = [sys.executable, "-m", "benchmarks.run", name]
+        if smoke:
+            cmd.append("--smoke")
+        r = subprocess.run(cmd)
         failures += r.returncode != 0
     if failures:
         sys.exit(1)

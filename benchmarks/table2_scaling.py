@@ -34,13 +34,13 @@ P_WORKERS = 16       # data-parallel workers (paper's worker count)
 RATIO = 0.001
 
 
-def _closed_form_rows():
+def _closed_form_rows(limit=None):
     from repro.dist.aggregate import strategy_wire_pairs
 
     rows = []
     ag_pairs = strategy_wire_pairs("allgather", P_WORKERS)
     gt_pairs = strategy_wire_pairs("gtopk", P_WORKERS)
-    for name, cfg in sorted(ARCHS.items()):
+    for name, cfg in sorted(ARCHS.items())[:limit]:
         import jax
         from repro.models import init_params
         shapes = jax.eval_shape(lambda k: init_params(cfg, k),
@@ -60,7 +60,7 @@ def _closed_form_rows():
     return rows
 
 
-def _merge_cost_rows():
+def _merge_cost_rows(d=1 << 20):
     """Measured per-call cost of the two sparse aggregation kernels.
 
     gtopk_round: one pairwise merge (2 decodes + scatter-add + exact
@@ -76,7 +76,6 @@ def _merge_cost_rows():
     from repro.core import codec
     from repro.dist.aggregate import encode_rows_topk
 
-    d = 1 << 20
     k_cap = math.ceil(4 * RATIO * d / 3)
     keys = jax.random.split(jax.random.PRNGKey(0), 2 + P_WORKERS)
     enc = lambda key: encode_rows_topk(  # noqa: E731
@@ -109,9 +108,9 @@ def _merge_cost_rows():
     ]
 
 
-def run():
-    rows = _closed_form_rows()
-    rows += _merge_cost_rows()
+def run(smoke: bool = False):
+    rows = _closed_form_rows(limit=3 if smoke else None)
+    rows += _merge_cost_rows(d=1 << 16 if smoke else 1 << 20)
     path = "experiments/dryrun_single.json"
     if not os.path.exists(path):
         rows.append(("table2/roofline", 0.0, "dryrun json missing; SKIP"))

@@ -6,7 +6,6 @@ Runs on a single CPU device (1x1 mesh).  Shows the public API end to end:
 config -> params -> train state -> compressed train step -> metrics.
 """
 import jax
-import jax.numpy as jnp
 
 from repro.data import lm_batch
 from repro.launch.mesh import make_mesh

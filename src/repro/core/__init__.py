@@ -3,10 +3,13 @@ the Gaussian_k approximate selector, and the contraction-bound analysis."""
 from repro.core import bounds, codec, compressors, error_feedback
 from repro.core.codec import SENTINEL, compact_by_mask, decode, decode_add, nnz
 from repro.core.compressors import available, get_compressor
-from repro.core.error_feedback import compress_with_ef, init_residual
+from repro.core.error_feedback import (BACKENDS, compress_with_ef,
+                                       init_residual, resolve_backend,
+                                       supports_fused)
 
 __all__ = [
     "bounds", "codec", "compressors", "error_feedback",
     "SENTINEL", "compact_by_mask", "decode", "decode_add", "nnz",
     "available", "get_compressor", "compress_with_ef", "init_residual",
+    "BACKENDS", "resolve_backend", "supports_fused",
 ]

@@ -22,13 +22,65 @@ def init_residual(grads_like) -> dict:
     return jax.tree.map(lambda g: jnp.zeros(g.shape, g.dtype), grads_like)
 
 
+BACKENDS = ("auto", "fused", "reference")
+
+
+def supports_fused(spec: CompressorSpec) -> bool:
+    """True when ``spec`` has a fused single-pass pipeline (DESIGN.md §8)."""
+    from repro.kernels.ef_fused import supports_fused as _kernel_supports
+    return _kernel_supports(spec.name)
+
+
+def resolve_backend(backend: str, spec: CompressorSpec,
+                    split: bool = True) -> bool:
+    """Whether a compression call should take the fused path.
+
+    ``"auto"`` fuses when the compressor has a fused pipeline AND the
+    caller hands over the ``(g, e)`` operands unsummed (``split`` —
+    that is what pass A fuses away); ``"fused"`` forces it (raising on
+    unsupported compressors); ``"reference"`` always takes the jnp
+    oracle path.
+
+    On CPU the fused kernels run under the Pallas interpreter, whose
+    per-grid-step overhead makes the plain-XLA ``"reference"`` path the
+    fastest option (DESIGN.md §8); ``"auto"`` still prefers the fused
+    kernels so the default exercises the TPU-faithful pipeline — pick
+    ``backend="reference"`` for CPU-throughput-critical runs.
+    """
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; have {BACKENDS}")
+    if backend == "reference":
+        return False
+    if backend == "fused":
+        if not supports_fused(spec):
+            raise ValueError(
+                f"compressor {spec.name!r} has no fused pipeline; "
+                "use backend='auto' or 'reference'")
+        return True
+    return supports_fused(spec) and split
+
+
 def compress_with_ef(u: jax.Array, spec: CompressorSpec, k: int,
-                     key: Optional[jax.Array] = None):
+                     key: Optional[jax.Array] = None, *,
+                     e: Optional[jax.Array] = None, backend: str = "auto"):
     """One error-feedback compression step on a flat vector ``u = g + e``.
 
     Returns ``(values, indices, residual)`` with
     ``decode(values, indices) + residual == u`` exactly (conservation).
+
+    When the residual is passed separately (``u`` holding just ``g``),
+    compressors with a fused pipeline dispatch to
+    ``kernels/ef_fused`` — ``g + e`` is accumulated block-wise inside
+    the kernels, never materialized, and the new residual is written in
+    the compaction pass (DESIGN.md §8).  ``backend`` overrides the
+    dispatch: ``"fused"`` forces the fused path (also for a
+    pre-accumulated ``u``), ``"reference"`` forces this jnp oracle.
     """
+    if resolve_backend(backend, spec, split=e is not None):
+        from repro.kernels.ef_fused import fused_compress_ef
+        return fused_compress_ef(u, e, spec.name, k)
+    if e is not None:
+        u = u + e
     values, indices = spec.select(u, k, key)
     residual = u - codec.decode(values, indices, u.shape[0])
     return values, indices, residual

@@ -52,6 +52,7 @@ import jax.numpy as jnp
 
 from repro.core import codec
 from repro.core.compressors import CompressorSpec
+from repro.core.error_feedback import resolve_backend
 from repro.dist import compat
 
 # ---------------------------------------------------------------------------
@@ -112,10 +113,39 @@ def _decode_rows(values: jax.Array, indices: jax.Array, d_row: int,
         lambda v, i: codec.decode(v.astype(dtype), i, d_row))(values, indices)
 
 
+def _compress_rows_fused(g_rows: jax.Array, e_rows: jax.Array,
+                         spec: CompressorSpec, k_row: int, k_cap: int,
+                         codec_dtype=None):
+    """Fused EF compression of ``(model_size, d_row)`` rows (DESIGN.md §8).
+
+    One fused pipeline per model-shard row — ``u = e + g`` accumulates
+    inside the kernels and the new residual is written by the compaction
+    pass, so the reference path's dense decode + subtract never run.
+    The ``codec_dtype`` down-cast error is folded back into the residual
+    with a k-sized scatter-add (``e' += decode(values − cast(values))``)
+    instead of a second dense pass; the result is bit-equal to the
+    reference's ``u − decode(cast(values))``.
+    """
+    from repro.kernels.ef_fused import fused_compress_ef
+
+    outs = [fused_compress_ef(g_rows[r], e_rows[r], spec.name, k_row,
+                              k_cap=k_cap)
+            for r in range(g_rows.shape[0])]
+    values = jnp.stack([o[0] for o in outs])
+    indices = jnp.stack([o[1] for o in outs])
+    new_e_rows = jnp.stack([o[2] for o in outs])
+    if codec_dtype is not None:
+        wire = values.astype(codec_dtype)
+        diff = values - wire.astype(values.dtype)
+        new_e_rows = jax.vmap(codec.decode_add)(new_e_rows, diff, indices)
+        values = wire
+    return values, indices, new_e_rows
+
+
 def compress_worker(g: jax.Array, e: jax.Array, spec: CompressorSpec,
                     ratio: float, model_size: int, key, *,
                     codec_dtype=None, momentum: float = 0.0,
-                    v: Optional[jax.Array] = None):
+                    v: Optional[jax.Array] = None, backend: str = "auto"):
     """One worker's error-feedback compression of one gradient leaf.
 
     ``g`` is the leaf-shaped local gradient, ``e`` the ``(d_pad,)`` flat
@@ -133,10 +163,20 @@ def compress_worker(g: jax.Array, e: jax.Array, spec: CompressorSpec,
     conservation identity makes overflow lossy only for one step).  With
     ``codec_dtype`` the down-cast error is likewise decoded into
     ``new_e``, so the wire stays Eq.-2 exact.
+
+    ``backend`` routes fused-capable compressors through the
+    ``kernels/ef_fused`` pipeline (momentum correction needs the
+    velocity update on materialized ``u`` and always takes the
+    reference path).
     """
     d = g.size
-    d_pad, d_row, k_row, _ = leaf_plan(d, model_size, ratio, spec)
+    d_pad, d_row, k_row, k_cap = leaf_plan(d, model_size, ratio, spec)
     g_flat = jnp.pad(g.reshape(-1), (0, d_pad - d)).astype(e.dtype)
+    if momentum == 0.0 and resolve_backend(backend, spec):
+        values, indices, new_e_rows = _compress_rows_fused(
+            g_flat.reshape(model_size, d_row), e.reshape(model_size, d_row),
+            spec, k_row, k_cap, codec_dtype)
+        return values, indices, new_e_rows.reshape(-1).astype(e.dtype), None
     if momentum > 0.0:
         v = momentum * v + g_flat
         u = e + v
@@ -357,7 +397,8 @@ def aggregate_compressed(grads, resid, spec: CompressorSpec, ratio: float,
                          strategy: str = "allgather",
                          hierarchical: bool = False, resid2=None,
                          world: int = 1, codec_dtype=None,
-                         momentum_correction: float = 0.0):
+                         momentum_correction: float = 0.0,
+                         backend: str = "auto"):
     """Eq. (2) sparse aggregation of a gradient pytree.
 
     ``strategy`` picks the wire pattern (module docstring, DESIGN.md §3,
@@ -372,6 +413,11 @@ def aggregate_compressed(grads, resid, spec: CompressorSpec, ratio: float,
     ``init_residuals``.  ``metrics`` are replicated scalars: ``density``
     (measured nnz fraction), ``comm_bits_sparse`` / ``comm_bits_dense``
     (per-worker wire volume, compile-time constants) and ``wire_bytes``.
+
+    ``backend`` selects the per-worker compression pipeline
+    (``"auto"``/``"fused"``/``"reference"``, DESIGN.md §8) for every
+    wire strategy — it changes HBM passes, never wire or Eq.-2
+    semantics.
     """
     axes = tuple(data_axes)
     mc = float(momentum_correction)
@@ -430,7 +476,8 @@ def aggregate_compressed(grads, resid, spec: CompressorSpec, ratio: float,
 
         values, indices, new_e, new_v = compress_worker(
             g, e, spec, ratio, model_size, lkey, codec_dtype=codec_dtype,
-            momentum=mc if use_v else 0.0, v=r2 if use_v else None)
+            momentum=mc if use_v else 0.0, v=r2 if use_v else None,
+            backend=backend)
         nnz_local += codec.nnz(indices).astype(jnp.float32)
 
         if gtopk:
@@ -447,16 +494,22 @@ def aggregate_compressed(grads, resid, spec: CompressorSpec, ratio: float,
         if hier:
             # second level: compress the pod-mean against resid2 and
             # average across pods (identical on every worker of a pod)
-            u2 = r2 + mean.reshape(-1)
-            v2, i2 = _select_rows(spec, u2.reshape(model_size, d_row),
-                                  k_row, jax.random.fold_in(lkey, 1))
-            if codec_dtype is not None:
-                v2 = v2.astype(codec_dtype)
+            if resolve_backend(backend, spec):
+                v2, i2, r2_rows = _compress_rows_fused(
+                    mean, r2.reshape(model_size, d_row), spec, k_row,
+                    k_cap, codec_dtype)
+                new_r2 = r2_rows.reshape(-1).astype(r2.dtype)
+            else:
+                u2 = r2 + mean.reshape(-1)
+                v2, i2 = _select_rows(spec, u2.reshape(model_size, d_row),
+                                      k_row, jax.random.fold_in(lkey, 1))
+                if codec_dtype is not None:
+                    v2 = v2.astype(codec_dtype)
+                new_r2 = (u2.reshape(model_size, d_row) -
+                          _decode_rows(v2, i2, d_row, jnp.float32)
+                          ).reshape(-1).astype(r2.dtype)
             mean = _gather_mean(v2, i2, outer_axis, n_pods, d_row,
                                 jnp.float32)
-            new_r2 = (u2.reshape(model_size, d_row) -
-                      _decode_rows(v2, i2, d_row, jnp.float32)
-                      ).reshape(-1).astype(r2.dtype)
             nnz_local += codec.nnz(i2).astype(jnp.float32)
         elif use_v:
             new_r2 = new_v

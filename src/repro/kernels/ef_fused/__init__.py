@@ -1,0 +1,22 @@
+"""Fused error-feedback compression pipeline (DESIGN.md §8).
+
+One Pallas pass streams ``g`` and ``e`` block-wise and accumulates the
+statistics the threshold needs (moments and, for hist-k, the magnitude
+histogram) WITHOUT materializing ``u = g + e``; for Gaussian-k a second
+pass counts ``|u| > t`` against every threshold the refinement loop
+could reach (the reachable set is a static binary tree, so the
+sequential ≤4-pass loop collapses into one multi-threshold pass); the
+final pass threshold-compacts the selection AND writes the new residual
+``e' = u`` (below threshold) / ``0`` (on the wire) in place — no dense
+decode, no residual subtract.  ~8 HBM passes per leaf become ~3
+(Gaussian-k) or 2 (hist-k), bit-for-bit equal to the unfused kernel
+pipeline.
+"""
+from repro.kernels.ef_fused.ops import (FUSED_COMPRESSORS, choose_block,
+                                        choose_stats_block, fused_compress_ef,
+                                        supports_fused, unfused_compress_ef)
+from repro.kernels.ef_fused.passes import count_passes
+
+__all__ = ["FUSED_COMPRESSORS", "choose_block", "choose_stats_block",
+           "fused_compress_ef", "supports_fused", "unfused_compress_ef",
+           "count_passes"]

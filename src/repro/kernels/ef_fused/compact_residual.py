@@ -1,0 +1,132 @@
+"""Pallas TPU kernel: pass B of the fused EF pipeline — threshold-compact
+AND residual write in one sweep.
+
+The unfused pipeline pays three leaf-sized passes after selection: the
+block compaction, a dense ``decode`` of the selected pairs, and the
+``e' = u − decode`` subtract.  But the residual is known block-locally
+at compaction time: every element is either on the wire (residual 0) or
+it is not (residual ``u``).  This kernel streams ``g`` (+ optional
+``e``), forms ``u`` in registers, stages the compacted values/offsets
+exactly like ``gaussian_topk/threshold_compact`` (same one-hot-matmul
+trick, same staging layout, so the downstream assembly is shared) and
+writes ``e'`` in the same sweep.
+
+Global-capacity truncation: an element can be staged per-block yet still
+dropped by the final ``k_cap`` assembly cut.  TPU grids are sequential,
+so a revisited accumulator carries the running number of staged slots in
+preceding blocks; with it the kernel knows each element's global slot
+``enc_before + pos`` and keeps exactly the wire-surviving elements out
+of ``e'`` — the dropped ones stay in the residual, preserving Eq. (2)
+conservation bit-for-bit.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.gaussian_topk.threshold_compact import SENTINEL
+
+
+def _kernel(*refs, has_e: bool, bcap: int, k_cap: int, with_resid: bool):
+    n_in = 3 if has_e else 2
+    if has_e:
+        t_ref, g_ref, e_ref = refs[:n_in]
+    else:
+        (t_ref, g_ref), e_ref = refs[:n_in], None
+    if with_resid:
+        vals_ref, offs_ref, cnt_ref, newe_ref, acc_ref = refs[n_in:]
+    else:
+        (vals_ref, offs_ref, cnt_ref, acc_ref), newe_ref = refs[n_in:], None
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = g_ref[0, :].astype(jnp.float32)
+    if has_e:
+        x = x + e_ref[0, :].astype(jnp.float32)
+    b = x.shape[0]
+    thres = t_ref[0, 0]
+    mask = jnp.abs(x) > thres
+    cnt = jnp.sum(mask.astype(jnp.int32))
+    pos = jnp.cumsum(mask.astype(jnp.int32)) - 1
+    keep = mask & (pos < bcap)                    # staged in this block
+    enc_before = acc_ref[0, 0]                    # staged slots before us
+
+    rows = jax.lax.broadcasted_iota(jnp.int32, (bcap, b), 0)
+    oh = ((rows == pos[None, :]) & keep[None, :]).astype(jnp.float32)
+    vals = oh @ x
+    offs_f = oh @ jax.lax.broadcasted_iota(jnp.float32, (b,), 0)
+    got = jnp.arange(bcap, dtype=jnp.int32) < jnp.minimum(cnt, bcap)
+    offs = jnp.where(got, offs_f.astype(jnp.int32), SENTINEL)
+
+    vals_ref[0, :] = vals
+    offs_ref[0, :] = offs
+    cnt_ref[0, 0] = cnt
+    if with_resid:
+        # staged slot j of a kept element equals its pos (truncation
+        # keeps the index-order prefix), so its assembly slot is
+        # enc_before + pos — the element survives the global k_cap cut
+        # iff that is < k_cap
+        on_wire = keep & (enc_before + pos < k_cap)
+        newe_ref[0, :] = jnp.where(on_wire, 0.0, x).astype(newe_ref.dtype)
+    acc_ref[0, 0] = enc_before + jnp.minimum(cnt, bcap)
+
+
+@functools.partial(jax.jit, static_argnames=("bcap", "k_cap", "block",
+                                             "out_dtype", "with_resid",
+                                             "interpret"))
+def compact_residual(g2d: jax.Array, e2d: jax.Array | None,
+                     thres: jax.Array, *, bcap: int, k_cap: int,
+                     block: int = 2048, out_dtype=jnp.float32,
+                     with_resid: bool = True, interpret: bool = True):
+    """One pass: staging buffers for the codec assembly + the new residual.
+
+    Returns ``(vals, offs, counts, new_e2d)``; the first three match
+    ``threshold_compact``'s contract (shared assembly), ``new_e2d`` is
+    the (nblocks, block) residual with wire-surviving slots zeroed —
+    or ``None`` with ``with_resid=False``, where the caller rebuilds the
+    residual from the wire pair instead (the interpret-mode interpreter
+    charges O(d) per grid step for carried outputs, so on CPU a k-sized
+    XLA scatter onto ``u`` is cheaper than the in-kernel write).
+    """
+    nblocks, b = g2d.shape
+    assert b == block and bcap % 8 == 0, (g2d.shape, block, bcap)
+    has_e = e2d is not None
+    t = jnp.asarray(thres, jnp.float32).reshape(1, 1)
+    operands = (t, g2d, e2d) if has_e else (t, g2d)
+    data_spec = pl.BlockSpec((1, block), lambda i: (i, 0))
+    in_specs = [pl.BlockSpec((1, 1), lambda i: (0, 0))]
+    in_specs += [data_spec] * (len(operands) - 1)
+    out_specs = [
+        pl.BlockSpec((1, bcap), lambda i: (i, 0)),
+        pl.BlockSpec((1, bcap), lambda i: (i, 0)),
+        pl.BlockSpec((1, 128), lambda i: (i, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((nblocks, bcap), jnp.float32),
+        jax.ShapeDtypeStruct((nblocks, bcap), jnp.int32),
+        jax.ShapeDtypeStruct((nblocks, 128), jnp.int32),
+    ]
+    if with_resid:
+        out_specs.append(pl.BlockSpec((1, block), lambda i: (i, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((nblocks, block), out_dtype))
+    out_specs.append(pl.BlockSpec((1, 128), lambda i: (0, 0)))
+    out_shape.append(jax.ShapeDtypeStruct((1, 128), jnp.int32))
+    kern = functools.partial(_kernel, has_e=has_e, bcap=bcap, k_cap=k_cap,
+                             with_resid=with_resid)
+    outs = pl.pallas_call(
+        kern,
+        grid=(nblocks,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*operands)
+    vals, offs, cnts = outs[0], outs[1], outs[2]
+    newe = outs[3] if with_resid else None
+    return vals, offs, cnts[:, 0], newe

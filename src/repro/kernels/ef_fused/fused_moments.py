@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: pass A of the fused EF pipeline.
+
+Streams ``g`` (and optionally ``e``) block-wise, forms ``u = g + e`` in
+registers and accumulates every statistic the threshold stage needs —
+sum, sum-of-squares, abs-max and (optionally) the hist-k magnitude
+histogram — WITHOUT writing ``u`` back to HBM.  This fuses the unfused
+pipeline's ``u = g + e`` materialization pass with the ``moments`` (and
+``abs_histogram``) passes into a single read of the operands.
+
+The accumulator layout and update ops replicate ``kernels/moments`` and
+``kernels/histk/hist`` exactly, so the fused statistics are bit-for-bit
+equal to the unfused kernels' (same per-block partial sums, same
+sequential-grid accumulation order).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.histk.hist import BINS, _bin_of
+
+
+def _kernel(*refs, has_e: bool, with_hist: bool):
+    if has_e:
+        g_ref, e_ref = refs[0], refs[1]
+        out = refs[2:]
+    else:
+        g_ref, out = refs[0], refs[1:]
+    acc_ref = out[0]
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        for r in out:
+            r[...] = jnp.zeros_like(r)
+
+    x = g_ref[0, :].astype(jnp.float32)
+    if has_e:
+        x = x + e_ref[0, :].astype(jnp.float32)
+
+    s = jnp.sum(x)
+    sq = jnp.sum(x * x)
+    mx = jnp.max(jnp.abs(x))
+    acc = acc_ref[0, :]
+    acc_ref[0, :] = jnp.concatenate([
+        (acc[0] + s)[None], (acc[1] + sq)[None],
+        jnp.maximum(acc[2], mx)[None], acc[3:],
+    ])
+
+    if with_hist:
+        hist_ref = out[1]
+        absx = jnp.abs(x)
+        b = _bin_of(absx)
+        rows = jax.lax.broadcasted_iota(jnp.int32, (BINS, x.shape[0]), 0)
+        oh = (rows == b[None, :]).astype(jnp.float32)
+        h = oh @ jnp.ones((x.shape[0],), jnp.float32)
+        hist_ref[0, :] = hist_ref[0, :] + h
+
+
+@functools.partial(jax.jit, static_argnames=("block", "with_hist",
+                                             "interpret"))
+def fused_moments(g2d: jax.Array, e2d: jax.Array | None = None, *,
+                  block: int = 2048, with_hist: bool = False,
+                  interpret: bool = True):
+    """(sum, sumsq, absmax[, hist]) of ``u = g + e`` over (nblocks, block)
+    operands — one HBM pass, ``u`` never materialized."""
+    nblocks, b = g2d.shape
+    assert b == block, (g2d.shape, block)
+    has_e = e2d is not None
+    operands = (g2d, e2d) if has_e else (g2d,)
+    data_spec = pl.BlockSpec((1, block), lambda i: (i, 0))
+    acc_spec = pl.BlockSpec((1, 128), lambda i: (0, 0))
+    out_specs = [acc_spec]
+    out_shape = [jax.ShapeDtypeStruct((1, 128), jnp.float32)]
+    if with_hist:
+        out_specs.append(pl.BlockSpec((1, BINS), lambda i: (0, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((1, BINS), jnp.float32))
+    kern = functools.partial(_kernel, has_e=has_e, with_hist=with_hist)
+    outs = pl.pallas_call(
+        kern,
+        grid=(nblocks,),
+        in_specs=[data_spec] * len(operands),
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*operands)
+    acc = outs[0]
+    if with_hist:
+        return acc[0, 0], acc[0, 1], acc[0, 2], outs[1][0]
+    return acc[0, 0], acc[0, 1], acc[0, 2], None

@@ -1,0 +1,53 @@
+"""HBM-pass accounting for the compression pipelines.
+
+A "pass" is one full streaming traversal of a leaf-sized (``d``-element)
+array by a kernel or elementwise op.  The pipeline entry points in
+``ops.py`` are plain (un-jitted) Python compositions of jitted kernels,
+so every call — eager or inside an enclosing trace — executes the
+``record`` calls exactly once per pipeline invocation, with loop
+multiplicities recorded explicitly at the loop site (a ``fori_loop``
+body traces once but streams HBM every iteration).
+
+``benchmarks/fig4_selection_speed.py`` wraps one eager pipeline call in
+:func:`count_passes` to measure the per-method pass count reported in
+``BENCH_fig4.json``.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import List, Tuple
+
+_STACK: List["PassLog"] = []
+
+
+class PassLog:
+    """Ordered (label, n_passes) records of one measured pipeline call."""
+
+    def __init__(self) -> None:
+        self.records: List[Tuple[str, int]] = []
+
+    def total(self) -> int:
+        return sum(n for _, n in self.records)
+
+    def by_label(self) -> dict:
+        out: dict = {}
+        for label, n in self.records:
+            out[label] = out.get(label, 0) + n
+        return out
+
+
+def record(label: str, n: int = 1) -> None:
+    """Record ``n`` HBM passes under ``label`` (no-op outside a log)."""
+    if _STACK and n:
+        _STACK[-1].records.append((label, int(n)))
+
+
+@contextmanager
+def count_passes():
+    """Collect :func:`record` calls issued while the context is active."""
+    log = PassLog()
+    _STACK.append(log)
+    try:
+        yield log
+    finally:
+        _STACK.pop()

@@ -64,23 +64,18 @@ def gaussian_threshold_kernel(u: jax.Array, k: int, *, block: int = 2048,
     return thres
 
 
-@functools.partial(jax.jit, static_argnames=("k_cap", "block", "bcap",
-                                             "interpret"))
-def select_by_threshold(u: jax.Array, thres: jax.Array, k_cap: int, *,
-                        block: int = 2048, bcap: int | None = None,
-                        interpret: bool = True):
-    """Compact |u| > thres into the fixed (k_cap,) codec via the Pallas
-    block-compaction kernel + small assembly."""
-    d = u.shape[0]
-    pad = (-d) % block
-    x2d = jnp.pad(u, (0, pad)).reshape(-1, block)
-    nblocks = x2d.shape[0]
-    if bcap is None:
-        bcap = default_bcap(k_cap, d, block)
-    thres = jnp.maximum(jnp.asarray(thres, jnp.float32), 0.0)
-    vals, offs, cnts = threshold_compact(x2d, thres, bcap=bcap, block=block,
-                                         interpret=interpret)
-    # --- assembly on ~k-sized arrays ---
+def assemble_staging(vals: jax.Array, offs: jax.Array, cnts: jax.Array,
+                     d: int, k_cap: int, *, block: int = 2048,
+                     out_dtype=jnp.float32):
+    """Assemble per-block staging buffers into the fixed ``(k_cap,)`` codec.
+
+    Operates on the ~k-sized ``(nblocks, bcap)`` staging layout written
+    by ``threshold_compact`` (and by the fused ``compact_residual``
+    kernel, which shares this assembly): per-block entries land at the
+    global slot ``cumsum(min(cnt, bcap)) + local``, anything past
+    ``k_cap`` is dropped.
+    """
+    nblocks, bcap = vals.shape
     enc = jnp.minimum(cnts, bcap)                       # encoded per block
     base = jnp.cumsum(enc) - enc                        # exclusive prefix
     j = jnp.arange(bcap, dtype=jnp.int32)[None, :]
@@ -92,7 +87,26 @@ def select_by_threshold(u: jax.Array, thres: jax.Array, k_cap: int, *,
         vals.ravel(), mode="drop")
     indices = jnp.full((k_cap + 1,), SENTINEL, jnp.int32).at[slot.ravel()].set(
         gidx.ravel(), mode="drop")
-    return values[:k_cap].astype(u.dtype), indices[:k_cap]
+    return values[:k_cap].astype(out_dtype), indices[:k_cap]
+
+
+@functools.partial(jax.jit, static_argnames=("k_cap", "block", "bcap",
+                                             "interpret"))
+def select_by_threshold(u: jax.Array, thres: jax.Array, k_cap: int, *,
+                        block: int = 2048, bcap: int | None = None,
+                        interpret: bool = True):
+    """Compact |u| > thres into the fixed (k_cap,) codec via the Pallas
+    block-compaction kernel + small assembly."""
+    d = u.shape[0]
+    pad = (-d) % block
+    x2d = jnp.pad(u, (0, pad)).reshape(-1, block)
+    if bcap is None:
+        bcap = default_bcap(k_cap, d, block)
+    thres = jnp.maximum(jnp.asarray(thres, jnp.float32), 0.0)
+    vals, offs, cnts = threshold_compact(x2d, thres, bcap=bcap, block=block,
+                                         interpret=interpret)
+    return assemble_staging(vals, offs, cnts, d, k_cap, block=block,
+                            out_dtype=u.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "block", "refine_iters",

@@ -12,15 +12,14 @@ from repro.kernels.gaussian_topk.ops import select_by_threshold
 from repro.kernels.histk.hist import abs_histogram, bin_lower_edge, BINS
 
 
-@functools.partial(jax.jit, static_argnames=("k", "block", "interpret"))
-def histk_threshold(u: jax.Array, k: int, *, block: int = 2048,
-                    interpret: bool = True) -> jax.Array:
+def threshold_from_histogram(h: jax.Array, k: int, pad: int = 0) -> jax.Array:
     """Threshold = lower edge of the first bin (from the top) whose
-    cumulative count reaches k."""
-    d = u.shape[0]
-    pad = (-d) % block
-    x2d = jnp.pad(u, (0, pad)).reshape(-1, block)
-    h = abs_histogram(x2d, block=block, interpret=interpret)
+    cumulative count reaches k, on a (BINS,) |u|-magnitude histogram.
+
+    Shared tail of ``histk_threshold`` and the fused pipeline's
+    histogram pass (``ef_fused``); ``pad`` is the number of padding
+    zeros the histogram counted into bin 0.
+    """
     h = h.at[0].add(-pad)            # padding zeros land in bin 0
     # cumulative count from the top bin downwards
     from_top = jnp.cumsum(h[::-1])[::-1]
@@ -30,6 +29,17 @@ def histk_threshold(u: jax.Array, k: int, *, block: int = 2048,
     bidx = jnp.max(jnp.where(reach, jnp.arange(BINS), -1))
     bidx = jnp.clip(bidx, 0, BINS - 1)
     return bin_lower_edge(bidx.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block", "interpret"))
+def histk_threshold(u: jax.Array, k: int, *, block: int = 2048,
+                    interpret: bool = True) -> jax.Array:
+    """Threshold selecting ~k elements via the one-pass histogram."""
+    d = u.shape[0]
+    pad = (-d) % block
+    x2d = jnp.pad(u, (0, pad)).reshape(-1, block)
+    h = abs_histogram(x2d, block=block, interpret=interpret)
+    return threshold_from_histogram(h, k, pad)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "block", "interpret"))

@@ -34,6 +34,11 @@ def parse_args(argv=None):
                          "reduction")
     ap.add_argument("--hierarchical", action="store_true",
                     help="deprecated alias for --strategy hierarchical")
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "fused", "reference"],
+                    help="compression pipeline: fused single-pass Pallas "
+                         "kernels (DESIGN.md §8) when the compressor "
+                         "supports them, or the jnp reference")
     ap.add_argument("--optimizer", default="sgd",
                     choices=["sgd", "adamw"])
     ap.add_argument("--lr", type=float, default=0.1)
@@ -99,11 +104,12 @@ def main(argv=None):
 
     step = make_train_step(cfg, mesh, opt, lr_fn,
                            compressor=args.compressor, ratio=args.ratio,
-                           strategy=strategy,
+                           strategy=strategy, backend=args.backend,
                            remat=not args.smoke, seed=args.seed)
 
     print(f"arch={cfg.name} compressor={args.compressor} ratio={args.ratio} "
-          f"strategy={strategy} mesh={args.mesh} steps={args.steps}")
+          f"strategy={strategy} backend={args.backend} mesh={args.mesh} "
+          f"steps={args.steps}")
     t0 = time.time()
     for i in range(args.steps):
         batch = batch_for(cfg, i, global_batch=args.batch, seq_len=args.seq,

@@ -18,8 +18,7 @@ is what makes gemma3-style 5:1 local:global viable at 500k context.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

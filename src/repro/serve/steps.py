@@ -10,7 +10,6 @@ import functools
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.dist import sharding as shd

@@ -17,7 +17,6 @@ Structure (DESIGN.md §4):
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable, Optional
 
 import jax
@@ -64,14 +63,20 @@ def make_train_step(cfg, mesh, optimizer: Optimizer, lr_fn: Callable,
                     hierarchical: bool = False,
                     remat: bool = True, seed: int = 0,
                     loss_fn: Optional[Callable] = None, codec_dtype=None,
-                    momentum_correction: float = 0.0):
+                    momentum_correction: float = 0.0,
+                    backend: str = "auto"):
     """Returns (step_fn, in_specs, out_specs).  ``step_fn(state, batch) ->
     (state, metrics)`` is already jit+shard_map wrapped for ``mesh``.
     ``compressor=None``/"none" gives the Dense-SGD baseline.
 
     ``strategy`` selects the sparse wire pattern — ``"allgather"``,
     ``"gtopk"`` or ``"hierarchical"`` (see dist/aggregate.py; the legacy
-    ``hierarchical=True`` flag maps to ``strategy="hierarchical"``)."""
+    ``hierarchical=True`` flag maps to ``strategy="hierarchical"``).
+
+    ``backend`` selects the per-worker compression pipeline:
+    ``"auto"`` (fused Pallas path for compressors that support it,
+    DESIGN.md §8), ``"fused"`` (forced; raises on unsupported
+    compressors) or ``"reference"`` (jnp oracle)."""
     data_axes = data_axes_of(mesh)
     strategy = aggregate.resolve_strategy(strategy, hierarchical)
     joint = _joint(data_axes)
@@ -104,7 +109,7 @@ def make_train_step(cfg, mesh, optimizer: Optimizer, lr_fn: Callable,
                 grads, resid, spec, ratio, data_axes, "model", msize, key,
                 strategy=strategy, resid2=resid2,
                 world=data_world_size(mesh), codec_dtype=codec_dtype,
-                momentum_correction=momentum_correction)
+                momentum_correction=momentum_correction, backend=backend)
             new_resid = jax.tree.map(lambda e: e[None], nr)
             new_resid2 = (jax.tree.map(lambda e: e[None], nr2)
                           if "resid2" in state else None)

@@ -1,0 +1,189 @@
+"""Fused EF-compression pipeline tests (DESIGN.md §8).
+
+Levels of guarantee checked here:
+
+* bit-for-bit: fused pipeline == unfused composition of the same
+  kernels (same thresholds via the count-tree replay, same compaction,
+  same residual) in every operand/residual fusion mode;
+* exact: Eq. (2) conservation ``decode(values, indices) + residual ==
+  g + e`` — including odd ``d``, bf16 leaves, all-zero gradients,
+  staging/capacity overflow and ``codec_dtype`` wire down-cast;
+* approximate: selected set matches the jnp reference compressor
+  (thresholds agree to float-reassociation noise, so on continuous data
+  the selections coincide; values then match exactly).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import codec, compress_with_ef, get_compressor, nnz
+from repro.dist.aggregate import compress_worker, flat_dims
+from repro.kernels.ef_fused import (count_passes, fused_compress_ef,
+                                    supports_fused, unfused_compress_ef)
+
+FUSED = ("gaussiank", "gaussiank2", "histk")
+# {} = interpret/CPU defaults (materialized u, scatter residual);
+# the other = the TPU 3-pass shape (streamed operands, in-kernel e')
+MODES = ({}, {"fuse_operands": True, "write_resid": True})
+
+
+def _ge(seed, d, gdtype=jnp.float32, edtype=jnp.float32):
+    g = 0.02 * jax.random.normal(jax.random.PRNGKey(seed), (d,))
+    e = 0.01 * jax.random.normal(jax.random.PRNGKey(seed + 1), (d,))
+    return g.astype(gdtype), e.astype(edtype)
+
+
+@pytest.mark.parametrize("name", FUSED)
+@pytest.mark.parametrize("d", [257, 2048, 5000, 65536])
+@pytest.mark.parametrize("mode", MODES, ids=["cpu", "tpu-shape"])
+def test_conservation_and_unfused_bitwise(name, d, mode):
+    """Conservation holds exactly and fused == unfused bit-for-bit
+    (both operand-fusion modes), including d odd / not block-divisible."""
+    k = max(1, d // 100)
+    g, e = _ge(d, d)
+    u = g + e
+    v, i, r = fused_compress_ef(g, e, name, k, **mode)
+    np.testing.assert_allclose(
+        np.asarray(codec.decode(v, i, d) + r), np.asarray(u), atol=1e-7)
+    bcap = 64  # pin staging so both pipelines truncate identically
+    v2, i2, r2 = unfused_compress_ef(g, e, name, k, bcap=bcap)
+    v1, i1, r1 = fused_compress_ef(g, e, name, k, bcap=bcap, **mode)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+    np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
+
+
+@pytest.mark.parametrize("name", FUSED)
+@pytest.mark.parametrize("d", [2048, 5000, 65536])
+def test_fused_matches_jnp_reference(name, d):
+    """Dispatch path vs the jnp oracle: same selected set, values/residual
+    to <=1e-6 (threshold estimates agree to reassociation noise)."""
+    k = max(1, d // 100)
+    spec = get_compressor(name)
+    g, e = _ge(d + 7, d)
+    vf, if_, rf = compress_with_ef(g, spec, k, e=e)            # auto->fused
+    vr, ir, rr = compress_with_ef(g, spec, k, e=e, backend="reference")
+    sf = set(np.asarray(if_).tolist()) - {codec.SENTINEL}
+    sr = set(np.asarray(ir).tolist()) - {codec.SENTINEL}
+    assert sf == sr
+    np.testing.assert_allclose(
+        np.asarray(codec.decode(vf, if_, d)),
+        np.asarray(codec.decode(vr, ir, d)), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(rf), np.asarray(rr), atol=1e-6)
+
+
+@pytest.mark.parametrize("name", FUSED)
+def test_all_zero_gradients(name):
+    d, k = 5000, 50
+    z = jnp.zeros((d,))
+    v, i, r = fused_compress_ef(z, z, name, k)
+    assert int(nnz(i)) == 0
+    assert np.all(np.asarray(v) == 0) and np.all(np.asarray(r) == 0)
+    assert np.isfinite(np.asarray(v)).all()
+
+
+@pytest.mark.parametrize("name", FUSED)
+@pytest.mark.parametrize("mode", MODES, ids=["cpu", "tpu-shape"])
+def test_bf16_leaves(name, mode):
+    """bf16 gradient with f32 residual (the dist layout) computes in f32
+    and conserves to f32 precision; all-bf16 conserves exactly in bf16
+    (wire values and residual entries are exact u elements)."""
+    d, k = 4096, 40
+    g, e = _ge(11, d, gdtype=jnp.bfloat16)
+    u = g.astype(jnp.float32) + e
+    v, i, r = fused_compress_ef(g, e, name, k, **mode)
+    assert r.dtype == jnp.float32
+    np.testing.assert_allclose(
+        np.asarray(codec.decode(v, i, d) + r), np.asarray(u), atol=1e-7)
+
+    gb, eb = _ge(13, d, gdtype=jnp.bfloat16, edtype=jnp.bfloat16)
+    ub = gb + eb
+    v, i, r = fused_compress_ef(gb, eb, name, k, **mode)
+    assert v.dtype == jnp.bfloat16 and r.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(codec.decode(v, i, d) + r, dtype=np.float32),
+        np.asarray(ub, dtype=np.float32))
+
+
+@pytest.mark.parametrize("name", FUSED)
+def test_staging_overflow_stays_in_residual(name):
+    """More above-threshold mass than bcap/k_cap can carry: the wire
+    truncates, conservation still holds exactly (on-wire accounting)."""
+    d = 4096
+    k = 48                                     # k_cap 64, bcap floor 64
+    g = 0.001 * jax.random.normal(jax.random.PRNGKey(3), (d,))
+    # 300 huge elements concentrated in the second block
+    g = g.at[2100:2400].set(5.0)
+    e = jnp.zeros((d,))
+    v, i, r = fused_compress_ef(g, e, name, k)
+    assert int(nnz(i)) <= 64
+    np.testing.assert_allclose(
+        np.asarray(codec.decode(v, i, d) + r), np.asarray(g), atol=1e-7)
+    # dropped mass is exactly what the wire did not carry
+    assert float(jnp.sum(jnp.abs(r) > 1.0)) >= 300 - 64
+
+
+def test_fused_fewer_passes():
+    g, e = _ge(17, 20_000)
+    with count_passes() as pf:
+        fused_compress_ef(g, e, "gaussiank", 200)
+    with count_passes() as pu:
+        unfused_compress_ef(g, e, "gaussiank", 200)
+    assert pf.total() < pu.total(), (pf.records, pu.records)
+    with count_passes() as pf2:
+        fused_compress_ef(g, e, "gaussiank", 200,
+                          fuse_operands=True, write_resid=True)
+    assert pf2.total() == 3, pf2.records     # the TPU-shape 3-pass claim
+    with count_passes() as ph:
+        fused_compress_ef(g, e, "histk", 200,
+                          fuse_operands=True, write_resid=True)
+    assert ph.total() == 2, ph.records
+
+
+@pytest.mark.parametrize("name", ["gaussiank", "histk"])
+@pytest.mark.parametrize("codec_dtype", [None, jnp.bfloat16])
+@pytest.mark.parametrize("model_size", [1, 2])
+def test_compress_worker_backend_equivalence(name, codec_dtype, model_size):
+    """dist-layer fused == reference: same wire set, same residual
+    (incl. the codec_dtype down-cast error landing in the residual)."""
+    spec = get_compressor(name)
+    g = 0.02 * jax.random.normal(jax.random.PRNGKey(0), (101, 103))
+    d_pad, d_row = flat_dims(g.size, model_size)
+    e = 0.01 * jax.random.normal(jax.random.PRNGKey(1), (d_pad,))
+    key = jax.random.PRNGKey(2)
+    out = {}
+    for backend in ("fused", "reference"):
+        out[backend] = compress_worker(g, e, spec, 0.01, model_size, key,
+                                       codec_dtype=codec_dtype,
+                                       backend=backend)
+    vf, if_, ef, _ = out["fused"]
+    vr, ir, er, _ = out["reference"]
+    for row in range(model_size):
+        sf = set(np.asarray(if_[row]).tolist()) - {codec.SENTINEL}
+        sr = set(np.asarray(ir[row]).tolist()) - {codec.SENTINEL}
+        assert sf == sr
+    np.testing.assert_allclose(np.asarray(ef), np.asarray(er), atol=1e-7)
+    u = e + jnp.pad(g.reshape(-1), (0, d_pad - g.size))
+    dec = jnp.concatenate(
+        [codec.decode(vf[r].astype(jnp.float32), if_[r], d_row)
+         for r in range(model_size)])
+    np.testing.assert_allclose(np.asarray(dec + ef), np.asarray(u),
+                               atol=2e-3 if codec_dtype else 1e-7)
+
+
+def test_backend_dispatch_rules():
+    topk = get_compressor("topk")
+    gk = get_compressor("gaussiank")
+    assert not supports_fused("topk") and supports_fused("gaussiank")
+    with pytest.raises(ValueError, match="no fused pipeline"):
+        compress_with_ef(jnp.ones((64,)), topk, 4, backend="fused")
+    with pytest.raises(ValueError, match="unknown backend"):
+        compress_with_ef(jnp.ones((64,)), gk, 4, backend="bogus")
+    # auto without a split residual stays on the reference path (same
+    # results as explicit reference)
+    u = 0.1 * jax.random.normal(jax.random.PRNGKey(5), (4096,))
+    va, ia, ra = compress_with_ef(u, gk, 40)
+    vr, ir, rr = compress_with_ef(u, gk, 40, backend="reference")
+    np.testing.assert_array_equal(np.asarray(ia), np.asarray(ir))
+    np.testing.assert_array_equal(np.asarray(va), np.asarray(vr))

@@ -17,7 +17,6 @@ from repro.kernels.histk import histk_select_kernel, histk_threshold
 from repro.kernels.histk.hist import abs_histogram
 from repro.kernels.histk.ref import abs_histogram_ref
 from repro.kernels.moments import mean_std_absmax
-from repro.kernels.moments.ref import moments_ref
 
 SHAPES = [257, 2048, 5000, 65536]
 DTYPES = [jnp.float32, jnp.bfloat16]

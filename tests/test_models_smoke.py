@@ -8,9 +8,8 @@ import pytest
 
 from repro.configs import ARCHS, list_archs
 from repro.data import batch_for
-from repro.models import (decode_step, init_params, loss_fn, param_count,
-                          prefill)
-from repro.optim import constant, sgd_momentum
+from repro.models import decode_step, init_params, loss_fn, prefill
+from repro.optim import sgd_momentum
 
 B, S = 2, 32
 

@@ -1,7 +1,6 @@
 """MoE dispatch correctness: the sort-based capacity dispatch must equal a
 naive dense-routing reference when capacity is not exceeded, and degrade by
 dropping (not corrupting) tokens when it is."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

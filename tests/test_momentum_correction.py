@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import codec, get_compressor
+from repro.core import get_compressor
 from repro.data import lm_batch
 from repro.launch.mesh import make_mesh
 from repro.models import ModelConfig, init_params

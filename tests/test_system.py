@@ -4,7 +4,6 @@ rules, input specs, schedules."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.checkpoint import load_state, save_state

@@ -1,0 +1,127 @@
+#!/usr/bin/env python
+"""Perf-regression gate over BENCH_fig4.json (stdlib only, CI `perf` job).
+
+Checks, in order:
+
+1. structural: for every shape, each fused method must report FEWER
+   measured passes and lower wall time than its unfused counterpart —
+   machine-independent, this is the fused pipeline's reason to exist;
+2. pass-count pin: fused pass counts must not exceed the committed
+   baseline's (a pass-count regression is a silent de-fusion);
+3. wall-time ratio: fused wall time must not regress more than
+   ``--max-regression`` (default 1.5x) against the committed baseline
+   for matching (shape, method) rows.  Wall time is machine-speed
+   normalized first: the ``*-jnp`` reference rows (pure XLA, pipeline-
+   independent) measure how fast this runner is relative to the one
+   that produced the baseline, and the measured fused times are scaled
+   by that factor — so the 1.5x headroom gates the PIPELINE, not the
+   runner generation.  Structural check 1 stays tight regardless.
+
+``--update`` rewrites the baseline from the measured file instead of
+checking (run on the reference machine, commit the result).
+
+Usage:
+  python tools/check_perf.py BENCH_fig4.json benchmarks/baselines/fig4.json
+  python tools/check_perf.py --update BENCH_fig4.json \
+      benchmarks/baselines/fig4.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+
+SCHEMA = "fig4/v1"
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    if data.get("schema") != SCHEMA:
+        raise SystemExit(f"{path}: unexpected schema {data.get('schema')!r} "
+                         f"(want {SCHEMA!r})")
+    return {(r["shape"], r["method"]): r for r in data["rows"]}
+
+
+def machine_speed(measured: dict, baseline: dict) -> float:
+    """Runner speed vs the baseline machine, from the *-jnp clock rows.
+
+    Median of measured/baseline over shared reference rows, clamped to
+    [0.25, 4] so a broken clock row cannot hide a real regression.
+    """
+    ratios = sorted(m["ms"] / baseline[key]["ms"]
+                    for key, m in measured.items()
+                    if key[1].endswith("-jnp") and key in baseline
+                    and baseline[key]["ms"] > 0)
+    if not ratios:
+        return 1.0
+    mid = ratios[len(ratios) // 2]
+    return min(4.0, max(0.25, mid))
+
+
+def check(measured: dict, baseline: dict, max_regression: float) -> list:
+    errors = []
+    speed = machine_speed(measured, baseline)
+    # 1. fused beats unfused within the measured file itself
+    fused_rows = [key for key in measured if key[1].endswith("-fused")]
+    if not fused_rows:
+        errors.append("no *-fused rows in measured file")
+    for shape, method in fused_rows:
+        twin = (shape, method.replace("-fused", "-unfused"))
+        if twin not in measured:
+            errors.append(f"{method}@{shape}: no unfused twin row")
+            continue
+        f, u = measured[(shape, method)], measured[twin]
+        if f["passes"] >= u["passes"]:
+            errors.append(f"{method}@{shape}: passes {f['passes']} >= "
+                          f"unfused {u['passes']}")
+        if f["ms"] >= u["ms"]:
+            errors.append(f"{method}@{shape}: {f['ms']}ms >= unfused "
+                          f"{u['ms']}ms")
+    # 2 + 3. against the committed baseline
+    for key, base in baseline.items():
+        if not key[1].endswith("-fused"):
+            continue
+        got = measured.get(key)
+        if got is None:
+            errors.append(f"{key[1]}@{key[0]}: missing from measured file")
+            continue
+        if base.get("passes") is not None and got["passes"] > base["passes"]:
+            errors.append(f"{key[1]}@{key[0]}: passes {got['passes']} > "
+                          f"baseline {base['passes']}")
+        norm_ms = got["ms"] / speed
+        if norm_ms > max_regression * base["ms"]:
+            errors.append(
+                f"{key[1]}@{key[0]}: {got['ms']}ms (speed-normalized "
+                f"{norm_ms:.1f}ms at x{speed:.2f}) > {max_regression}x "
+                f"baseline {base['ms']}ms")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("measured", help="freshly emitted BENCH_fig4.json")
+    ap.add_argument("baseline", help="committed benchmarks/baselines/fig4.json")
+    ap.add_argument("--max-regression", type=float, default=1.5)
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from the measured file")
+    args = ap.parse_args(argv)
+
+    if args.update:
+        load(args.measured)  # schema validation
+        shutil.copyfile(args.measured, args.baseline)
+        print(f"baseline updated: {args.baseline}")
+        return 0
+
+    errors = check(load(args.measured), load(args.baseline),
+                   args.max_regression)
+    for e in errors:
+        print(f"PERF FAIL: {e}")
+    if not errors:
+        print("perf gate ok")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
