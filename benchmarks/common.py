@@ -24,9 +24,22 @@ def timeit(fn, *args, warmup=2, iters=5):
 
 def simulate_sparsified_sgd(compressor: str, *, workers=16, ratio=0.001,
                             steps=150, lr=0.05, seed=0, batch=64,
-                            collect_u_hist_at=(), k_override=None):
+                            collect_u_hist_at=(), k_override=None,
+                            spec=None, density_policy=None, stats_out=None):
     """Single-process simulation of paper Eq. (2) on FNN-3 with synthetic
-    MNIST-like data.  Returns (losses, accs, comm_elems_per_step, hists)."""
+    MNIST-like data.  Returns (losses, accs, comm_elems_per_step, hists).
+
+    ``spec`` reuses an already-built ``CompressorSpec`` (sweep callers
+    hoist it instead of rebuilding per sweep point).  ``stats_out`` (a
+    list) receives one ``(workers, n_leaves, 3)`` array of per-worker
+    pass-A moments ``(sum, sumsq, absmax)`` of ``u`` per step — the
+    offline-replay input for the fig10 adaptive rows.  ``density_policy``
+    (``core.adaptk.DensityPolicy``) switches the per-leaf budgets to the
+    adaptive controller, mirroring the mesh path: worker-mean signal,
+    budget-exact allocation, traced per-step ``k`` against the static
+    ceiling capacity.
+    """
+    from repro.core import adaptk
     from repro.data import mnist_like
 
     params = init_fnn(jax.random.PRNGKey(seed))
@@ -35,52 +48,107 @@ def simulate_sparsified_sgd(compressor: str, *, workers=16, ratio=0.001,
     leaves, treedef = jax.tree.flatten(params)
     dims = [l.size for l in leaves]
     dense = compressor == "none"
-    spec = None if dense else get_compressor(compressor)
+    if spec is None and not dense:
+        spec = get_compressor(compressor)
+    adaptive = density_policy is not None and not dense
+    want_stats = adaptive or stats_out is not None
     resid = [jnp.zeros((workers, d)) for d in dims]
 
     grad_fn = jax.jit(jax.value_and_grad(lambda p, b: fnn_loss(p, b),
                                          has_aux=True))
+    stats_fn = jax.jit(lambda u: jnp.stack(
+        [jnp.sum(u), jnp.sum(u * u), jnp.max(jnp.abs(u))]))
     # one jitted compress step per leaf shape — eager dispatch with
     # python-int fold_in constants would compile thousands of executables
     # and exhaust the JIT commit limit
     compress_fns = {}
+    bounds = {}
     if not dense:
         for li, d in enumerate(dims):
             k = (k_override(d) if k_override
                  else max(1, int(np.ceil(ratio * d))))
             k = min(k, d)
+            if adaptive:
+                lo, hi = adaptk.leaf_bounds(d, ratio, density_policy)
+                bounds[li] = (lo, hi)
+                k_cap = min(d, spec.k_cap(hi, d))
 
-            def make(d=d, k=k):
-                def f(u, key):
-                    v, i = spec.select(u, k, key)
-                    dec = codec.decode(v, i, d)
-                    return dec, codec.nnz(i)
-                return jax.jit(f)
+                def make(d=d, k_cap=k_cap):
+                    def f(u, kk, key):
+                        v, i = adaptk.select_dynamic(spec, u, kk, k_cap,
+                                                     key)
+                        dec = codec.decode(v, i, d)
+                        return dec, codec.nnz(i)
+                    return jax.jit(f)
+            else:
+                def make(d=d, k=k):
+                    def f(u, key):
+                        v, i = spec.select(u, k, key)
+                        dec = codec.decode(v, i, d)
+                        return dec, codec.nnz(i)
+                    return jax.jit(f)
             compress_fns[li] = make()
+    alloc_fn = None
+    if adaptive:
+        lo_v = [bounds[li][0] for li in range(len(dims))]
+        hi_v = [bounds[li][1] for li in range(len(dims))]
+        alloc_fn = jax.jit(lambda K, w: adaptk.allocate(K, w, lo_v, hi_v))
+    ema_sig = None
     losses, accs, comm, hists = [], [], [], {}
     for t in range(steps):
-        gsum = [jnp.zeros((d,)) for d in dims]
+        # phase 1: per-worker grads and accumulated u (residual folded in)
         tot_loss = tot_acc = 0.0
-        n_sel = 0
+        us = []
         for w in range(workers):
             b = mnist_like(t * workers + w, batch=batch, seed=seed + 17)
             (l, m), g = grad_fn(params, b)
             tot_loss += float(l) / workers
             tot_acc += float(m["acc"]) / workers
             g_leaves = treedef.flatten_up_to(g)
-            for li, gl in enumerate(g_leaves):
-                d = dims[li]
+            if dense:
+                us.append([gl.reshape(-1) for gl in g_leaves])
+            else:
+                us.append([resid[li][w] + gl.reshape(-1)
+                           for li, gl in enumerate(g_leaves)])
+        if want_stats:
+            stats = np.asarray([[np.asarray(stats_fn(u)) for u in row]
+                                for row in us])
+            if stats_out is not None:
+                stats_out.append(stats)
+        # phase 2: allocation (adaptive) mirrors the mesh path — one
+        # worker-mean signal, one budget-exact integer allocation
+        k_alloc = None
+        if adaptive:
+            sig = np.asarray([
+                [float(adaptk.leaf_signal(density_policy.policy, dims[li],
+                                          *stats[w, li]))
+                 for li in range(len(dims))] for w in range(workers)])
+            fresh = jnp.asarray(sig.mean(axis=0), jnp.float32)
+            if density_policy.ema > 0.0 and ema_sig is not None:
+                fresh = (density_policy.ema * ema_sig
+                         + (1.0 - density_policy.ema) * fresh)
+            ema_sig = fresh
+            K = adaptk.budget(dims, ratio, density_policy, t)
+            k_alloc, _ = alloc_fn(K, fresh)
+        # phase 3: compress, update residuals, aggregate
+        gsum = [jnp.zeros((d,)) for d in dims]
+        n_sel = 0
+        for w in range(workers):
+            for li, d in enumerate(dims):
+                u = us[w][li]
                 if dense:
-                    gsum[li] = gsum[li] + gl.reshape(-1)
+                    gsum[li] = gsum[li] + u
                     n_sel += d
                     continue
-                u = resid[li][w] + gl.reshape(-1)
                 if w == 0 and li == 1 and t in collect_u_hist_at:
                     hists[t] = np.histogram(np.asarray(u), bins=60)
                 key = jax.random.fold_in(
                     jax.random.PRNGKey(seed + 99),
                     jnp.uint32(t * 1000 + w * 10 + li))
-                dec, nnz = compress_fns[li](u, key)
+                if adaptive:
+                    dec, nnz = compress_fns[li](u, k_alloc[li], key)
+                else:
+                    dec, nnz = compress_fns[li](u, key)
                 resid[li] = resid[li].at[w].set(u - dec)
                 gsum[li] = gsum[li] + dec
                 n_sel += int(nnz)

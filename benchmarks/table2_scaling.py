@@ -108,8 +108,52 @@ def _merge_cost_rows(d=1 << 20):
     ]
 
 
+def _adaptk_rows(limit=None):
+    """Adaptive vs fixed-k wire accounting per architecture.
+
+    The adaptive path's wire *capacity* is sized from the policy ceiling
+    (k_cap stays a compile-time constant — DESIGN.md §9), so the rows
+    report both sides of the trade: the capacity inflation
+    (``cap_x`` = ceiling-derived bytes / fixed-k bytes) and the
+    steady-state occupancy (``occ`` = allocated budget / capacity).
+    Allocation runs the real ``adaptk.allocate`` on a deterministic
+    synthetic variance signal, asserting budget exactness per arch.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import adaptk
+    from repro.models import init_params
+
+    policy = adaptk.make_policy("variance")
+    rows = []
+    for name, cfg in sorted(ARCHS.items())[:limit]:
+        shapes = jax.eval_shape(lambda k: init_params(cfg, k),
+                                jax.random.PRNGKey(0))
+        dims = [x.size for x in jax.tree.leaves(shapes)]
+        lo, hi = zip(*(adaptk.leaf_bounds(d, RATIO, policy) for d in dims))
+        K = int(round(RATIO * sum(dims)))
+        rng = np.random.default_rng(0)
+        w = rng.random(len(dims)) * np.asarray(dims)   # synthetic d·Var
+        k, K_eff = adaptk.allocate(K, jnp.asarray(w, jnp.float32), lo, hi)
+        k = np.asarray(k)
+        exact = int(k.sum()) == int(K_eff)
+        cap_fixed = sum(math.ceil(4 * max(1, math.ceil(RATIO * d)) / 3)
+                        for d in dims)
+        cap_adapt = sum(min(d, math.ceil(4 * h / 3))
+                        for d, h in zip(dims, hi))
+        rows.append((f"table2/adaptk/{name}", 0.0,
+                     f"K={int(K_eff)};exact={exact};"
+                     f"floor={sum(lo)};ceil={sum(hi)};"
+                     f"cap_x={cap_adapt / cap_fixed:.2f};"
+                     f"occ={int(K_eff) / cap_adapt:.2f}"))
+    return rows
+
+
 def run(smoke: bool = False):
     rows = _closed_form_rows(limit=3 if smoke else None)
+    rows += _adaptk_rows(limit=3 if smoke else None)
     rows += _merge_cost_rows(d=1 << 16 if smoke else 1 << 20)
     path = "experiments/dryrun_single.json"
     if not os.path.exists(path):

@@ -8,5 +8,7 @@ CONFIG = ModelConfig(
     d_ff=6400, vocab_size=32064,
     ffn_pattern=("moe",), num_experts=16, experts_per_token=2,
     moe_d_ff=6400, rope_theta=10_000.0,
+    # expert grads are sparse/bursty — absmax steering reacts fastest
+    density_policy="absmax",
     source="hf:microsoft/Phi-3.5-MoE-instruct",
 ).validate()

@@ -41,6 +41,13 @@ Step 3-4 is the ``strategy`` choice (DESIGN.md §3, §7):
 blend: ``v = mu*v + g; u = e + v``; coordinates that make it onto the
 wire are zeroed in ``v`` (``resid2`` doubles as the ``v`` state — it is
 mutually exclusive with ``hierarchical``).
+
+``density_policy`` switches step 2 to the adaptive layer-wise density
+path (``core/adaptk``, DESIGN.md §9): per-leaf pass-A moments →
+pmean'd allocation signal → budget-exact redistribution of the global
+``K_total(step)`` into per-leaf *traced* budgets, with every static
+capacity (codec ``k_cap``, staging, wire volume) derived from the
+policy's ceiling clamp.
 """
 from __future__ import annotations
 
@@ -50,7 +57,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import codec
+from repro.core import adaptk, codec
 from repro.core.compressors import CompressorSpec
 from repro.core.error_feedback import resolve_backend
 from repro.dist import compat
@@ -95,6 +102,24 @@ def leaf_plan(size: int, model_size: int, ratio: float,
     return d_pad, d_row, k_row, k_cap
 
 
+def leaf_plan_adaptive(size: int, model_size: int, ratio: float,
+                       spec: CompressorSpec, policy: adaptk.DensityPolicy):
+    """(d_pad, d_row, k_lo, k_hi, k_cap_row) for one leaf under an
+    adaptive density policy.
+
+    ``[k_lo, k_hi]`` are the leaf-level integer clamps the allocator
+    respects; every static shape — the codec row capacity ``k_cap_row``
+    and, downstream, staging widths and wire volume — derives from the
+    *ceiling* ``k_hi``, so the per-step traced ``k`` can move anywhere
+    inside the clamp without touching a single buffer shape.
+    """
+    d_pad, d_row = flat_dims(size, model_size)
+    k_lo, k_hi = adaptk.leaf_bounds(size, ratio, policy)
+    k_hi_row = min(d_row, max(1, -(-k_hi // model_size)))
+    k_cap = min(d_row, spec.k_cap(k_hi_row, d_row))
+    return d_pad, d_row, k_lo, k_hi, k_cap
+
+
 # ---------------------------------------------------------------------------
 # worker-local compression (pure: unit-testable without a mesh)
 # ---------------------------------------------------------------------------
@@ -114,8 +139,8 @@ def _decode_rows(values: jax.Array, indices: jax.Array, d_row: int,
 
 
 def _compress_rows_fused(g_rows: jax.Array, e_rows: jax.Array,
-                         spec: CompressorSpec, k_row: int, k_cap: int,
-                         codec_dtype=None):
+                         spec: CompressorSpec, k_row, k_cap: int,
+                         codec_dtype=None, row_stats=None):
     """Fused EF compression of ``(model_size, d_row)`` rows (DESIGN.md §8).
 
     One fused pipeline per model-shard row — ``u = e + g`` accumulates
@@ -125,11 +150,17 @@ def _compress_rows_fused(g_rows: jax.Array, e_rows: jax.Array,
     with a k-sized scatter-add (``e' += decode(values − cast(values))``)
     instead of a second dense pass; the result is bit-equal to the
     reference's ``u − decode(cast(values))``.
+
+    ``k_row`` may be a traced scalar when ``row_stats`` (per-row pass-A
+    tuples from ``fused_pass_a``) is supplied or the compressor's
+    threshold math accepts it — the adaptive-density path (DESIGN.md §9).
     """
     from repro.kernels.ef_fused import fused_compress_ef
 
     outs = [fused_compress_ef(g_rows[r], e_rows[r], spec.name, k_row,
-                              k_cap=k_cap)
+                              k_cap=k_cap,
+                              stats=None if row_stats is None
+                              else row_stats[r])
             for r in range(g_rows.shape[0])]
     values = jnp.stack([o[0] for o in outs])
     indices = jnp.stack([o[1] for o in outs])
@@ -199,6 +230,80 @@ def compress_worker(g: jax.Array, e: jax.Array, spec: CompressorSpec,
         new_v = (v.reshape(model_size, d_row) * keep).reshape(-1).astype(
             e.dtype)
     return values, indices, new_e, new_v
+
+
+# ---------------------------------------------------------------------------
+# adaptive-density worker path (pure pieces: unit-testable without a mesh)
+# ---------------------------------------------------------------------------
+
+
+def pass_a_stats_rows(g_rows: jax.Array, e_rows: jax.Array, name: str,
+                      fused: bool):
+    """Per-row pass-A statistics of ``u = g + e`` for one leaf.
+
+    Returns ``(row_stats, (s, sq, mx))``: ``row_stats`` is the list of
+    per-row ``fused_pass_a`` tuples to hand back to the fused pipeline
+    (``None`` on the reference backend — its threshold recomputes from
+    ``u`` directly), and the second element is the leaf-level reduction
+    feeding ``adaptk.leaf_signal``.  Zero-padding contributes nothing to
+    ``s``/``sq``/``mx``, so the leaf moments are exact for the true
+    (unpadded) leaf.
+    """
+    if fused:
+        from repro.kernels.ef_fused import fused_pass_a
+
+        row_stats = [fused_pass_a(g_rows[r], e_rows[r], name)
+                     for r in range(g_rows.shape[0])]
+        s = sum(st[0] for st in row_stats)
+        sq = sum(st[1] for st in row_stats)
+        mx = jnp.max(jnp.stack([st[2] for st in row_stats]))
+        return row_stats, (s, sq, mx)
+    u = g_rows.astype(jnp.result_type(g_rows.dtype, e_rows.dtype)) + e_rows
+    return None, (jnp.sum(u), jnp.sum(u * u), jnp.max(jnp.abs(u)))
+
+
+def compress_worker_dynamic(g_flat: jax.Array, e: jax.Array,
+                            spec: CompressorSpec, k, model_size: int, key, *,
+                            k_cap: int, codec_dtype=None,
+                            backend: str = "auto", row_stats=None):
+    """``compress_worker`` with a *traced* per-leaf element budget ``k``.
+
+    ``g_flat`` is the already flat-padded ``(d_pad,)`` accumulation
+    target (aggregate pads once, during the stats phase) and ``e`` the
+    matching residual.  The leaf budget splits over model shards the
+    same way as the static path — ``k_row = ceil(k / model_size)`` —
+    except the ceil now runs in traced int32; the codec capacity
+    ``k_cap`` is the static ceiling-derived row capacity from
+    ``leaf_plan_adaptive``, which bounds ``k_row`` by construction.
+
+    Returns ``(values, indices, new_e)`` with the same Eq. (2)
+    conservation and sentinel-codec contracts as ``compress_worker``
+    (property-tested in tests/test_properties.py); DGC momentum
+    correction is fixed-k only and handled by the caller.
+    """
+    d_row = g_flat.size // model_size
+    k_row = jnp.clip((k + model_size - 1) // model_size, 1, d_row)
+    g_rows = g_flat.reshape(model_size, d_row)
+    e_rows = e.reshape(model_size, d_row)
+    if resolve_backend(backend, spec):
+        values, indices, new_e_rows = _compress_rows_fused(
+            g_rows, e_rows, spec, k_row, k_cap, codec_dtype, row_stats)
+        return values, indices, new_e_rows.reshape(-1).astype(e.dtype)
+    u_rows = (g_rows.astype(jnp.result_type(g_rows.dtype, e.dtype))
+              + e_rows)
+    if spec.needs_key:
+        keys = jax.random.split(key, model_size)
+        values, indices = jax.vmap(
+            lambda r, kk: adaptk.select_dynamic(spec, r, k_row, k_cap, kk))(
+                u_rows, keys)
+    else:
+        values, indices = jax.vmap(
+            lambda r: adaptk.select_dynamic(spec, r, k_row, k_cap))(u_rows)
+    if codec_dtype is not None:
+        values = values.astype(codec_dtype)
+    decoded = _decode_rows(values, indices, d_row, u_rows.dtype)
+    new_e = (u_rows - decoded).reshape(-1).astype(e.dtype)
+    return values, indices, new_e
 
 
 # ---------------------------------------------------------------------------
@@ -398,7 +503,8 @@ def aggregate_compressed(grads, resid, spec: CompressorSpec, ratio: float,
                          hierarchical: bool = False, resid2=None,
                          world: int = 1, codec_dtype=None,
                          momentum_correction: float = 0.0,
-                         backend: str = "auto"):
+                         backend: str = "auto",
+                         density_policy=None, adapt_state=None, step=None):
     """Eq. (2) sparse aggregation of a gradient pytree.
 
     ``strategy`` picks the wire pattern (module docstring, DESIGN.md §3,
@@ -408,20 +514,44 @@ def aggregate_compressed(grads, resid, spec: CompressorSpec, ratio: float,
     pairs, needs power-of-two data-axis sizes).  ``hierarchical=True`` is
     the legacy spelling of ``strategy="hierarchical"``.
 
-    Returns ``(agg, new_resid, new_resid2, metrics)``; ``agg`` has the
-    gradient's tree/shape/dtype, residual trees are flat-padded like
-    ``init_residuals``.  ``metrics`` are replicated scalars: ``density``
-    (measured nnz fraction), ``comm_bits_sparse`` / ``comm_bits_dense``
-    (per-worker wire volume, compile-time constants) and ``wire_bytes``.
+    Returns ``(agg, new_resid, new_resid2, new_adapt_state, metrics)``;
+    ``agg`` has the gradient's tree/shape/dtype, residual trees are
+    flat-padded like ``init_residuals``.  ``metrics`` are replicated
+    scalars: ``density`` (measured nnz fraction), ``comm_bits_sparse`` /
+    ``comm_bits_dense`` (per-worker wire volume, compile-time constants)
+    and ``wire_bytes``.
 
     ``backend`` selects the per-worker compression pipeline
     (``"auto"``/``"fused"``/``"reference"``, DESIGN.md §8) for every
     wire strategy — it changes HBM passes, never wire or Eq.-2
     semantics.
+
+    ``density_policy`` (a ``core.adaptk.DensityPolicy``) switches every
+    leaf to the adaptive-density path (DESIGN.md §9): pass A of the
+    fused pipeline runs first for every leaf, the per-leaf moments are
+    pmean'd over the data axes (one identical allocation on every
+    worker), and the global budget ``K_total(step)`` is redistributed
+    into per-leaf traced budgets by ``adaptk.allocate`` — budget-exact
+    under the policy's floor/ceiling clamps.  Codec capacities, staging
+    widths and the wire volume stay the compile-time constants derived
+    from the ceiling clamp.  ``adapt_state`` carries the EMA controller
+    state (lives in TrainState; ``None`` = stateless) and is returned
+    updated as ``new_adapt_state``; ``step`` feeds the DGC warmup
+    schedule.  Adaptive mode requires a ``DYNAMIC_COMPRESSORS`` member
+    and is mutually exclusive with ``momentum_correction``.
     """
     axes = tuple(data_axes)
     mc = float(momentum_correction)
     strategy = resolve_strategy(strategy, hierarchical)
+    adaptive = density_policy is not None
+    if adaptive and mc > 0.0:
+        raise ValueError("momentum_correction is fixed-k only (the DGC "
+                         "velocity update needs the static-k path); "
+                         "disable it or density_policy")
+    if adaptive and not adaptk.supports_dynamic(spec):
+        raise ValueError(
+            f"compressor {spec.name!r} has no dynamic-k path; adaptive "
+            f"density supports {adaptk.DYNAMIC_COMPRESSORS}")
     # without a second residual the two-level path cannot run; fall back
     # to the flat gather over ALL data axes rather than silently dropping
     # the outer (pod) contribution
@@ -461,6 +591,35 @@ def aggregate_compressed(grads, resid, spec: CompressorSpec, ratio: float,
     r2_leaves = (treedef.flatten_up_to(resid2) if resid2 is not None
                  else [None] * len(g_leaves))
 
+    # -- adaptive phase 1: pass-A stats -> pmean'd signal -> allocation --
+    new_adapt = adapt_state
+    k_alloc = K_eff = None
+    plans, g_flats, leaf_row_stats = {}, {}, {}
+    if adaptive:
+        fusedp = resolve_backend(backend, spec)
+        sigs = []
+        for li, (g, e) in enumerate(zip(g_leaves, e_leaves)):
+            plan = leaf_plan_adaptive(g.size, model_size, ratio, spec,
+                                      density_policy)
+            d_pad, d_row = plan[0], plan[1]
+            g_flat = jnp.pad(g.reshape(-1),
+                             (0, d_pad - g.size)).astype(e.dtype)
+            row_stats, (s, sq, mx) = pass_a_stats_rows(
+                g_flat.reshape(model_size, d_row),
+                e.reshape(model_size, d_row), spec.name, fusedp)
+            sigs.append(adaptk.leaf_signal(density_policy.policy, g.size,
+                                           s, sq, mx))
+            plans[li], g_flats[li], leaf_row_stats[li] = plan, g_flat, \
+                row_stats
+        signal = jax.lax.pmean(jnp.stack(sigs), axes)
+        signal, new_adapt = adaptk.blend_signal(adapt_state, signal,
+                                                density_policy.ema)
+        K = adaptk.budget([g.size for g in g_leaves], ratio,
+                          density_policy, step)
+        k_alloc, K_eff = adaptk.allocate(
+            K, signal, [plans[li][2] for li in range(len(g_leaves))],
+            [plans[li][3] for li in range(len(g_leaves))])
+
     val_bits = jnp.dtype(codec_dtype).itemsize * 8 if codec_dtype else 32
     d_total = 0
     nnz_local = jnp.zeros((), jnp.float32)
@@ -472,12 +631,21 @@ def aggregate_compressed(grads, resid, spec: CompressorSpec, ratio: float,
     for li, (g, e, r2) in enumerate(zip(g_leaves, e_leaves, r2_leaves)):
         lkey = jax.random.fold_in(key, li)
         d = g.size
-        d_pad, d_row, k_row, k_cap = leaf_plan(d, model_size, ratio, spec)
-
-        values, indices, new_e, new_v = compress_worker(
-            g, e, spec, ratio, model_size, lkey, codec_dtype=codec_dtype,
-            momentum=mc if use_v else 0.0, v=r2 if use_v else None,
-            backend=backend)
+        if adaptive:
+            d_pad, d_row, _, _, k_cap = plans[li]
+            values, indices, new_e = compress_worker_dynamic(
+                g_flats[li], e, spec, k_alloc[li], model_size, lkey,
+                k_cap=k_cap, codec_dtype=codec_dtype, backend=backend,
+                row_stats=leaf_row_stats[li])
+            new_v = None
+        else:
+            d_pad, d_row, k_row, k_cap = leaf_plan(d, model_size, ratio,
+                                                   spec)
+            values, indices, new_e, new_v = compress_worker(
+                g, e, spec, ratio, model_size, lkey,
+                codec_dtype=codec_dtype,
+                momentum=mc if use_v else 0.0, v=r2 if use_v else None,
+                backend=backend)
         nnz_local += codec.nnz(indices).astype(jnp.float32)
 
         if gtopk:
@@ -494,7 +662,14 @@ def aggregate_compressed(grads, resid, spec: CompressorSpec, ratio: float,
         if hier:
             # second level: compress the pod-mean against resid2 and
             # average across pods (identical on every worker of a pod)
-            if resolve_backend(backend, spec):
+            if adaptive:
+                # same per-leaf budget as level 1 (its pass-A stats are
+                # the pod-mean's own — computed inside the pipeline)
+                v2, i2, new_r2 = compress_worker_dynamic(
+                    mean.reshape(-1).astype(r2.dtype), r2, spec,
+                    k_alloc[li], model_size, jax.random.fold_in(lkey, 1),
+                    k_cap=k_cap, codec_dtype=codec_dtype, backend=backend)
+            elif resolve_backend(backend, spec):
                 v2, i2, r2_rows = _compress_rows_fused(
                     mean, r2.reshape(model_size, d_row), spec, k_row,
                     k_cap, codec_dtype)
@@ -535,7 +710,14 @@ def aggregate_compressed(grads, resid, spec: CompressorSpec, ratio: float,
         "comm_bits_dense": jnp.float32(bits_dense),
         "wire_bytes": jnp.float32(bits_sparse / 8.0),
     }
+    if adaptive:
+        # identical on every worker: the allocation ran on the pmean'd
+        # signal (budget exactness: k_total == clip of the configured
+        # budget into the policy's [floor, ceiling] sums)
+        metrics["k_total"] = K_eff.astype(jnp.float32)
+        metrics["density_budget"] = K_eff.astype(jnp.float32) / d_total
     new_resid = treedef.unflatten(new_e_leaves)
     new_resid2 = (treedef.unflatten(new_r2_leaves)
                   if resid2 is not None else None)
-    return treedef.unflatten(agg_leaves), new_resid, new_resid2, metrics
+    return (treedef.unflatten(agg_leaves), new_resid, new_resid2,
+            new_adapt, metrics)

@@ -14,9 +14,10 @@ pipeline.
 """
 from repro.kernels.ef_fused.ops import (FUSED_COMPRESSORS, choose_block,
                                         choose_stats_block, fused_compress_ef,
-                                        supports_fused, unfused_compress_ef)
+                                        fused_pass_a, supports_fused,
+                                        unfused_compress_ef)
 from repro.kernels.ef_fused.passes import count_passes
 
 __all__ = ["FUSED_COMPRESSORS", "choose_block", "choose_stats_block",
-           "fused_compress_ef", "supports_fused", "unfused_compress_ef",
-           "count_passes"]
+           "fused_compress_ef", "fused_pass_a", "supports_fused",
+           "unfused_compress_ef", "count_passes"]

@@ -131,11 +131,15 @@ def _replay_refinement(heap: jax.Array, counts: jax.Array, k: int,
     return heap[idx]
 
 
-def _gaussian_threshold_fused(g2d, e2d, d: int, k: int, *, block: int,
+def _gaussian_threshold_fused(g2d, e2d, d: int, k, *, block: int,
                               refine_iters: int, two_sided: bool,
-                              interpret: bool) -> jax.Array:
-    s, sq, _, _ = fused_moments(g2d, e2d, block=block, interpret=interpret)
-    passes.record("moments", 1)
+                              interpret: bool, moments=None) -> jax.Array:
+    if moments is None:
+        s, sq, _, _ = fused_moments(g2d, e2d, block=block,
+                                    interpret=interpret)
+        passes.record("moments", 1)
+    else:
+        s, sq = moments
     mean = s / d
     var = jnp.maximum(sq / d - mean * mean, 0.0)
     std = jnp.sqrt(var)
@@ -148,14 +152,15 @@ def _gaussian_threshold_fused(g2d, e2d, d: int, k: int, *, block: int,
     return _replay_refinement(heap, counts, k, refine_iters)
 
 
-def _hist_threshold_fused(g2d, e2d, d: int, k: int, pad: int, *, block: int,
-                          interpret: bool) -> jax.Array:
+def _hist_threshold_fused(g2d, e2d, d: int, k, pad: int, *, block: int,
+                          interpret: bool, hist=None) -> jax.Array:
     # identical post-processing to histk_threshold (shared helper) on
     # the fused histogram
-    _, _, _, h = fused_moments(g2d, e2d, block=block, with_hist=True,
-                               interpret=interpret)
-    passes.record("moments+hist", 1)
-    return threshold_from_histogram(h, k, pad)
+    if hist is None:
+        _, _, _, hist = fused_moments(g2d, e2d, block=block, with_hist=True,
+                                      interpret=interpret)
+        passes.record("moments+hist", 1)
+    return threshold_from_histogram(hist, k, pad)
 
 
 def _resolve(g, e, name, k, k_cap, block, stats_block, bcap, interpret,
@@ -180,13 +185,58 @@ def _resolve(g, e, name, k, k_cap, block, stats_block, bcap, interpret,
     return d, k_cap, block, stats_block, bcap, interpret
 
 
-def fused_compress_ef(g: jax.Array, e: jax.Array | None, name: str, k: int,
+def fused_pass_a(g: jax.Array, e: jax.Array | None, name: str, *,
+                 stats_block: int | None = None,
+                 interpret: bool | None = None,
+                 fuse_operands: bool | None = None):
+    """Pass A of the fused pipeline, standalone: the ``(sum, sumsq,
+    absmax, hist)`` statistics of ``u = g + e`` (``hist`` is ``None``
+    except for ``histk``), computed with the exact block/fusion policy
+    ``fused_compress_ef`` would use for the same operands — hand the
+    result back via its ``stats=`` argument and the pipeline's own
+    moments pass is skipped, bit-identically.
+
+    This is the adaptive-density hook (DESIGN.md §9): a controller reads
+    every leaf's moments first, redistributes the global budget into
+    per-leaf traced ``k``'s, then runs threshold+compaction — pass A is
+    still executed exactly once per leaf.  Only the moments/hist read is
+    counted in :mod:`passes` here; the ``u`` materialization the
+    unfused-operand (interpreter) shape performs is charged by the
+    compress call, which re-forms it (XLA CSEs the duplicate add).
+    """
+    if not supports_fused(name):
+        raise ValueError(f"compressor {name!r} has no fused pipeline; "
+                         f"supported: {FUSED_COMPRESSORS}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    d = g.shape[0]
+    if e is not None:
+        assert e.shape == g.shape, (g.shape, e.shape)
+    if stats_block is None:
+        stats_block = choose_stats_block(d, interpret)
+    if fuse_operands is None:
+        fuse_operands = not interpret
+    if e is not None and not fuse_operands:
+        a, b = g.astype(jnp.result_type(g.dtype, e.dtype)) + e, None
+    else:
+        a, b = g, e
+    a_s, _ = _pad2d(a, stats_block)
+    b_s = _pad2d(b, stats_block)[0] if b is not None else None
+    with_hist = name == "histk"
+    s, sq, mx, h = fused_moments(a_s, b_s, block=stats_block,
+                                 with_hist=with_hist, interpret=interpret)
+    passes.record("moments+hist" if with_hist else "moments", 1)
+    return s, sq, mx, h
+
+
+def fused_compress_ef(g: jax.Array, e: jax.Array | None, name: str, k,
                       *, k_cap: int | None = None, block: int | None = None,
                       stats_block: int | None = None, refine_iters: int = 4,
                       bcap: int | None = None,
                       interpret: bool | None = None,
                       fuse_operands: bool | None = None,
-                      write_resid: bool | None = None):
+                      write_resid: bool | None = None,
+                      stats=None):
     """One EF compression step on ``u = g + e``, fused (DESIGN.md §8).
 
     Returns ``(values, indices, new_e)`` with the Eq. (2) conservation
@@ -209,6 +259,13 @@ def fused_compress_ef(g: jax.Array, e: jax.Array | None, name: str, k: int,
     once, the kernels run single-operand, and the residual is rebuilt
     as ``u.at[wire_indices].set(0)`` (bit-equal: wire values are exact
     ``u`` elements).
+
+    ``stats`` accepts a precomputed pass-A tuple from
+    :func:`fused_pass_a` (same operands, same block config) and skips
+    the internal moments/hist pass.  ``k`` may then be a *traced* scalar
+    (adaptive density, DESIGN.md §9) as long as every shape-bearing
+    argument — ``k_cap`` in particular — is passed statically: ``k``
+    only enters the threshold math and the refinement accept band.
     """
     d, k_cap, block, stats_block, bcap, interpret = _resolve(
         g, e, name, k, k_cap, block, stats_block, bcap, interpret,
@@ -228,11 +285,14 @@ def fused_compress_ef(g: jax.Array, e: jax.Array | None, name: str, k: int,
     b_s = _pad2d(b, stats_block)[0] if b is not None else None
     if name == "histk":
         thres = _hist_threshold_fused(a_s, b_s, d, k, pad_s,
-                                      block=stats_block, interpret=interpret)
+                                      block=stats_block, interpret=interpret,
+                                      hist=None if stats is None
+                                      else stats[3])
     else:
         thres = _gaussian_threshold_fused(
             a_s, b_s, d, k, block=stats_block, refine_iters=refine_iters,
-            two_sided=(name == "gaussiank2"), interpret=interpret)
+            two_sided=(name == "gaussiank2"), interpret=interpret,
+            moments=None if stats is None else stats[:2])
     thres = jnp.maximum(jnp.asarray(thres, jnp.float32), 0.0)
 
     a_c = _pad2d(a, block)[0]

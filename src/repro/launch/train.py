@@ -39,6 +39,25 @@ def parse_args(argv=None):
                     help="compression pipeline: fused single-pass Pallas "
                          "kernels (DESIGN.md §8) when the compressor "
                          "supports them, or the jnp reference")
+    ap.add_argument("--density-policy", default="",
+                    choices=["", "none", "uniform", "variance", "absmax"],
+                    help="adaptive layer-wise density (DESIGN.md §9): "
+                         "redistribute the global k budget across leaves "
+                         "each step from the fused pass-A moments; "
+                         "default: the arch config's density_policy, "
+                         "else fixed-k")
+    ap.add_argument("--density-floor", type=float, default=0.25,
+                    help="per-leaf floor clamp as a multiple of the "
+                         "fixed-k share")
+    ap.add_argument("--density-ceil", type=float, default=4.0,
+                    help="per-leaf ceiling clamp (sizes the static codec "
+                         "capacity / wire volume)")
+    ap.add_argument("--density-ema", type=float, default=0.0,
+                    help="EMA over the allocation signal (0 = stateless)")
+    ap.add_argument("--density-warmup", type=int, default=0,
+                    help="DGC-style exponential density warmup steps")
+    ap.add_argument("--density-warmup-mult", type=float, default=16.0,
+                    help="warmup start multiplier on the global budget")
     ap.add_argument("--optimizer", default="sgd",
                     choices=["sgd", "adamw"])
     ap.add_argument("--lr", type=float, default=0.1)
@@ -93,23 +112,41 @@ def main(argv=None):
     from repro.dist.aggregate import resolve_strategy
 
     strategy = resolve_strategy(args.strategy, args.hierarchical)
+    from repro.core.adaptk import DYNAMIC_COMPRESSORS, make_policy
+
+    # an explicit --density-policy always wins (and a non-dynamic
+    # compressor then fails loudly in dist/aggregate); the arch-config
+    # DEFAULT only applies where adaptive density is supported, so e.g.
+    # `--compressor dgck` keeps training fixed-k as before
+    pol_name = args.density_policy
+    if not pol_name and args.compressor in DYNAMIC_COMPRESSORS:
+        pol_name = cfg.density_policy
+    policy = None
+    if pol_name and pol_name != "none" and args.compressor != "none":
+        policy = make_policy(
+            pol_name, floor_mult=args.density_floor,
+            ceil_mult=args.density_ceil, ema=args.density_ema,
+            warmup_steps=args.density_warmup,
+            warmup_mult=args.density_warmup_mult if args.density_warmup
+            else 1.0)
     params = init_params(cfg, jax.random.PRNGKey(args.seed))
     state = init_train_state(
         params, opt, workers=data_world_size(mesh),
         model_size=model_axis_size(mesh),
         with_residual=args.compressor not in ("none",),
-        strategy=strategy)
+        strategy=strategy, density_policy=policy)
     if args.resume:
         state = load_state(args.resume, state)
 
     step = make_train_step(cfg, mesh, opt, lr_fn,
                            compressor=args.compressor, ratio=args.ratio,
                            strategy=strategy, backend=args.backend,
-                           remat=not args.smoke, seed=args.seed)
+                           remat=not args.smoke, seed=args.seed,
+                           density_policy=policy)
 
     print(f"arch={cfg.name} compressor={args.compressor} ratio={args.ratio} "
           f"strategy={strategy} backend={args.backend} mesh={args.mesh} "
-          f"steps={args.steps}")
+          f"density_policy={pol_name or 'fixed-k'} steps={args.steps}")
     t0 = time.time()
     for i in range(args.steps):
         batch = batch_for(cfg, i, global_batch=args.batch, seq_len=args.seq,
@@ -120,6 +157,8 @@ def main(argv=None):
             if "comm_bits_sparse" in m:
                 r = float(m["comm_bits_sparse"]) / float(m["comm_bits_dense"])
                 comm = f" comm_frac={r:.4f}"
+            if "k_total" in m:
+                comm += f" k_total={int(m['k_total'])}"
             print(f"step {i:5d} loss={float(m['loss']):.4f} "
                   f"lr={float(m['lr']):.4g}{comm} "
                   f"({time.time() - t0:.1f}s)", flush=True)

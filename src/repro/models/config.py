@@ -51,6 +51,11 @@ class ModelConfig:
     # frame/patch embeddings of shape (B, S, d_model))
     frontend: str = "tokens"
 
+    # adaptive layer-wise density (core/adaptk.py, DESIGN.md §9):
+    # "" = fixed-k; "uniform" | "variance" | "absmax" is the default
+    # --density-policy the training CLI resolves for this arch
+    density_policy: str = ""
+
     # numerics
     param_dtype: str = "float32"
     activation_dtype: str = "float32"

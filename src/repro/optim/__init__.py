@@ -1,5 +1,6 @@
 from repro.optim.optimizers import Optimizer, adamw, sgd_momentum
-from repro.optim.schedules import constant, cosine, step_decay, warmup_cosine
+from repro.optim.schedules import (constant, cosine, density_warmup,
+                                   step_decay, warmup_cosine)
 
 __all__ = ["Optimizer", "adamw", "sgd_momentum", "constant", "cosine",
-           "step_decay", "warmup_cosine"]
+           "density_warmup", "step_decay", "warmup_cosine"]

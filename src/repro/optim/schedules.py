@@ -30,3 +30,17 @@ def warmup_cosine(lr: float, warmup: int, total_steps: int,
         return jnp.where(step < warmup, jnp.float32(lr) * w,
                          base(step - warmup))
     return f
+
+
+def density_warmup(start_mult: float, warmup: int):
+    """DGC-style exponential density warmup (Lin et al. 2018 §3.2),
+    as a multiplier on the final density: starts at ``start_mult`` (e.g.
+    16x the target density) and decays *geometrically* to 1x over
+    ``warmup`` steps, then stays at 1.  ``step -> multiplier`` — drives
+    the adaptive controller's global budget (``core/adaptk.budget``)."""
+    log_m = jnp.float32(jnp.log(jnp.maximum(start_mult, 1.0)))
+
+    def f(step):
+        t = jnp.clip(step / jnp.float32(max(warmup, 1)), 0.0, 1.0)
+        return jnp.exp(log_m * (1.0 - t))
+    return f

@@ -9,6 +9,7 @@ from typing import Any, Dict
 import jax
 import jax.numpy as jnp
 
+from repro.core import adaptk
 from repro.dist.aggregate import init_residuals, resolve_strategy
 from repro.optim import Optimizer
 
@@ -16,12 +17,18 @@ from repro.optim import Optimizer
 def init_train_state(params, optimizer: Optimizer, *, workers: int,
                      model_size: int, with_residual: bool = True,
                      hierarchical: bool = False, strategy: str = "allgather",
-                     resid_dtype=jnp.float32) -> Dict[str, Any]:
+                     resid_dtype=jnp.float32,
+                     density_policy=None) -> Dict[str, Any]:
     """``strategy="hierarchical"`` (or the legacy ``hierarchical=True``)
     allocates the second residual ``resid2`` the two-level path
     compresses the pod-mean against; ``"allgather"`` and ``"gtopk"``
     need only the per-worker ``resid`` (the gTop-k merge drops are
-    credited into it directly — dist/aggregate.py)."""
+    credited into it directly — dist/aggregate.py).
+
+    ``density_policy`` additionally allocates the adaptive-density
+    controller state ``adaptk`` (the EMA'd per-leaf allocation signal,
+    replicated across workers — core/adaptk.py, DESIGN.md §9); it
+    checkpoints with the rest of the state."""
     state: Dict[str, Any] = {
         "params": params,
         "opt": optimizer.init(params),
@@ -34,6 +41,9 @@ def init_train_state(params, optimizer: Optimizer, *, workers: int,
         if resolve_strategy(strategy, hierarchical) == "hierarchical":
             state["resid2"] = jax.tree.map(
                 lambda e: jnp.zeros((workers,) + e.shape, e.dtype), one)
+        if density_policy is not None:
+            state["adaptk"] = adaptk.init_controller_state(
+                len(jax.tree.leaves(params)))
     return state
 
 

@@ -64,7 +64,7 @@ def make_train_step(cfg, mesh, optimizer: Optimizer, lr_fn: Callable,
                     remat: bool = True, seed: int = 0,
                     loss_fn: Optional[Callable] = None, codec_dtype=None,
                     momentum_correction: float = 0.0,
-                    backend: str = "auto"):
+                    backend: str = "auto", density_policy=None):
     """Returns (step_fn, in_specs, out_specs).  ``step_fn(state, batch) ->
     (state, metrics)`` is already jit+shard_map wrapped for ``mesh``.
     ``compressor=None``/"none" gives the Dense-SGD baseline.
@@ -76,12 +76,21 @@ def make_train_step(cfg, mesh, optimizer: Optimizer, lr_fn: Callable,
     ``backend`` selects the per-worker compression pipeline:
     ``"auto"`` (fused Pallas path for compressors that support it,
     DESIGN.md §8), ``"fused"`` (forced; raises on unsupported
-    compressors) or ``"reference"`` (jnp oracle)."""
+    compressors) or ``"reference"`` (jnp oracle).
+
+    ``density_policy`` (``core.adaptk.DensityPolicy``) turns on adaptive
+    layer-wise density (DESIGN.md §9): the per-leaf budgets become
+    traced per-step quantities steered by the pass-A gradient moments;
+    the EMA controller state lives in ``state["adaptk"]`` (allocate it
+    via ``init_train_state(..., density_policy=...)``)."""
     data_axes = data_axes_of(mesh)
     strategy = aggregate.resolve_strategy(strategy, hierarchical)
     joint = _joint(data_axes)
     msize = model_axis_size(mesh)
     dense = compressor in (None, "none")
+    if dense and density_policy is not None:
+        raise ValueError("density_policy steers the sparse budget; it has "
+                         "no meaning for the Dense-SGD baseline")
     spec = None if dense else get_compressor(compressor)
     base_key = jax.random.PRNGKey(seed)
     constrain = lambda tree: constrain_params(tree, "model", msize)  # noqa: E731
@@ -89,6 +98,13 @@ def make_train_step(cfg, mesh, optimizer: Optimizer, lr_fn: Callable,
                                                   constrain=constrain))
 
     def per_worker_step(state, batch):
+        if (density_policy is not None and density_policy.ema > 0.0
+                and "adaptk" not in state):
+            raise ValueError(
+                "density_policy.ema > 0 needs the controller state; "
+                "allocate it via init_train_state(..., "
+                "density_policy=...) — without it the EMA would be "
+                "silently disabled")
         params = constrain_params(state["params"], "model", msize)
         (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(
             params, batch)
@@ -98,6 +114,7 @@ def make_train_step(cfg, mesh, optimizer: Optimizer, lr_fn: Callable,
             agg = aggregate.aggregate_dense(grads, data_axes)
             new_resid = state.get("resid")
             new_resid2 = state.get("resid2")
+            new_adapt = state.get("adaptk")
             agg_metrics = {}
         else:
             resid = jax.tree.map(lambda e: e[0], state["resid"])
@@ -105,11 +122,14 @@ def make_train_step(cfg, mesh, optimizer: Optimizer, lr_fn: Callable,
                       if "resid2" in state else None)
             key = jax.random.fold_in(base_key, state["step"])
             key = jax.random.fold_in(key, worker_index(data_axes))
-            agg, nr, nr2, agg_metrics = aggregate.aggregate_compressed(
-                grads, resid, spec, ratio, data_axes, "model", msize, key,
-                strategy=strategy, resid2=resid2,
-                world=data_world_size(mesh), codec_dtype=codec_dtype,
-                momentum_correction=momentum_correction, backend=backend)
+            agg, nr, nr2, new_adapt, agg_metrics = \
+                aggregate.aggregate_compressed(
+                    grads, resid, spec, ratio, data_axes, "model", msize,
+                    key, strategy=strategy, resid2=resid2,
+                    world=data_world_size(mesh), codec_dtype=codec_dtype,
+                    momentum_correction=momentum_correction,
+                    backend=backend, density_policy=density_policy,
+                    adapt_state=state.get("adaptk"), step=state["step"])
             new_resid = jax.tree.map(lambda e: e[None], nr)
             new_resid2 = (jax.tree.map(lambda e: e[None], nr2)
                           if "resid2" in state else None)
@@ -124,6 +144,8 @@ def make_train_step(cfg, mesh, optimizer: Optimizer, lr_fn: Callable,
             new_state["resid"] = new_resid
         if new_resid2 is not None and "resid2" in state:
             new_state["resid2"] = new_resid2
+        if new_adapt is not None and "adaptk" in state:
+            new_state["adaptk"] = new_adapt
 
         metrics = {k: jax.lax.pmean(v, joint) for k, v in metrics.items()}
         metrics["lr"] = lr

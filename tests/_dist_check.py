@@ -123,7 +123,7 @@ def check_gtopk():
     e = 0.001 * jax.random.normal(jax.random.PRNGKey(99), (W, d_pad))
 
     def body(g_loc, e_loc):
-        agg, ne, _, metrics = aggregate.aggregate_compressed(
+        agg, ne, _, _, metrics = aggregate.aggregate_compressed(
             {"w": g_loc[0]}, {"w": e_loc[0]}, spec, ratio, ("data",),
             "model", msize, jax.random.PRNGKey(7), strategy="gtopk",
             world=W)
@@ -242,6 +242,133 @@ def check_dense():
     print("DENSE OK", err)
 
 
+def check_adaptk():
+    """Adaptive layer-wise density on the mesh == single-process
+    simulation within 1e-7, for all three wire strategies (ISSUE 4
+    acceptance criterion).
+
+    allgather + gtopk (and the documented hierarchical->allgather
+    fallback) run on the (4,2) mesh; the genuine two-level hierarchical
+    path needs two data axes and runs on (2,2,2).  The simulation
+    mirrors the mesh path's phases exactly: per-worker pass-A stats,
+    worker-mean signal, one budget-exact allocation, dynamic-k
+    selection, then the strategy's wire pattern.  Budget exactness on
+    the mesh is asserted via the k_total metric.
+    """
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import adaptk
+    from repro.dist import aggregate, compat
+
+    spec = get_compressor("topk")
+    policy = adaptk.make_policy("variance")
+    ratio, d, msize = 0.02, 407, 2
+    d_pad, d_row = aggregate.flat_dims(d, msize)
+    _, _, k_lo, k_hi, k_cap = aggregate.leaf_plan_adaptive(
+        d, msize, ratio, spec, policy)
+
+    def mesh_run(shape, axes_names, strategy, with_r2, g, e, r2):
+        mesh = make_mesh(shape, axes_names)
+        W = data_world_size(mesh)
+        data_axes = tuple(a for a in axes_names if a != "model")
+        joint = data_axes if len(data_axes) > 1 else data_axes[0]
+
+        def body(g_loc, e_loc, *r2_loc):
+            r2t = {"w": r2_loc[0][0]} if r2_loc else None
+            agg, ne, nr2, _, metrics = aggregate.aggregate_compressed(
+                {"w": g_loc[0]}, {"w": e_loc[0]}, spec, ratio, data_axes,
+                "model", msize, jax.random.PRNGKey(7), strategy=strategy,
+                resid2=r2t, world=W, backend="reference",
+                density_policy=policy, step=jnp.int32(0))
+            outs = (agg["w"], ne["w"][None], metrics["k_total"])
+            if r2_loc:
+                outs += (nr2["w"][None],)
+            return outs
+
+        in_specs = (P(joint), P(joint)) + ((P(joint),) if with_r2 else ())
+        out_specs = (P(), P(joint), P()) + ((P(joint),) if with_r2
+                                            else ())
+        sm = compat.shard_map(body, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs,
+                              axis_names=set(data_axes), check_vma=False)
+        args = (g, e) + ((r2,) if with_r2 else ())
+        return jax.jit(sm)(*args)
+
+    def simulate(W, n_pods, strategy, g, e, r2):
+        u = [e[w] + jnp.pad(g[w], (0, d_pad - d)) for w in range(W)]
+        sig = jnp.mean(jnp.stack([
+            adaptk.leaf_signal("variance", d, jnp.sum(u[w]),
+                               jnp.sum(u[w] * u[w]),
+                               jnp.max(jnp.abs(u[w])))
+            for w in range(W)]))
+        K = adaptk.budget([d], ratio, policy, 0)
+        k_alloc, K_eff = adaptk.allocate(K, sig[None], [k_lo], [k_hi])
+        k_row = min(d_row, max(1, -(-int(k_alloc[0]) // msize)))
+
+        def enc(flat):
+            rows = flat.reshape(msize, d_row)
+            v, i = jax.vmap(lambda r: adaptk.select_dynamic(
+                spec, r, jnp.int32(k_row), k_cap))(rows)
+            dec = jax.vmap(lambda vv, ii: codec.decode(vv, ii, d_row))(v, i)
+            return v, i, dec
+
+        partials, new_e = [], []
+        for w in range(W):
+            _, _, dec = enc(u[w])
+            partials.append(dec)
+            new_e.append(u[w] - dec.reshape(-1))
+        if strategy == "gtopk":
+            final, drops = aggregate.gtopk_simulate(partials, k_cap)
+            mean = final / W
+            new_e = [new_e[w] + drops[w].reshape(-1) for w in range(W)]
+            new_r2 = None
+        elif strategy == "hierarchical" and n_pods > 1:
+            n_inner = W // n_pods
+            pod_means = [sum(partials[p * n_inner + i]
+                             for i in range(n_inner)) / n_inner
+                         for p in range(n_pods)]
+            dec2, new_r2 = [None] * W, [None] * W
+            for w in range(W):
+                u2 = r2[w] + pod_means[w // n_inner].reshape(-1)
+                _, _, dd = enc(u2)
+                dec2[w] = dd
+                new_r2[w] = u2 - dd.reshape(-1)
+            mean = sum(dec2[p * n_inner] for p in range(n_pods)) / n_pods
+        else:   # allgather (and the hierarchical fallback on 1 data axis)
+            mean = jnp.sum(jnp.stack(partials), axis=0) / W
+            new_r2 = None
+        return (mean.reshape(-1)[:d], jnp.stack(new_e), int(K_eff),
+                jnp.stack(new_r2) if new_r2 else None)
+
+    cases = [((4, 2), ("data", "model"), "allgather", 1, False),
+             ((4, 2), ("data", "model"), "gtopk", 1, False),
+             ((4, 2), ("data", "model"), "hierarchical", 1, True),
+             ((2, 2, 2), ("pod", "data", "model"), "hierarchical", 2,
+              True)]
+    for shape, axes_names, strategy, n_pods, with_r2 in cases:
+        W = 4
+        g = jnp.stack([0.01 * jax.random.normal(jax.random.PRNGKey(w),
+                                                (d,)) for w in range(W)])
+        e = 0.001 * jax.random.normal(jax.random.PRNGKey(99), (W, d_pad))
+        r2 = (0.0005 * jax.random.normal(jax.random.PRNGKey(123),
+                                         (W, d_pad)) if with_r2 else None)
+        outs = mesh_run(shape, axes_names, strategy, with_r2, g, e, r2)
+        agg_m, e_m, k_tot = outs[0], outs[1], outs[2]
+        agg_s, e_s, K_eff, r2_s = simulate(W, n_pods, strategy, g, e, r2)
+        agg_err = float(jnp.max(jnp.abs(agg_m - agg_s)))
+        e_err = float(jnp.max(jnp.abs(e_m - e_s)))
+        assert int(k_tot) == K_eff, (strategy, int(k_tot), K_eff)
+        assert agg_err < 1e-7, (strategy, shape, agg_err)
+        assert e_err < 1e-7, (strategy, shape, e_err)
+        if with_r2 and n_pods > 1:
+            r2_err = float(jnp.max(jnp.abs(outs[3] - r2_s)))
+            assert r2_err < 1e-7, (strategy, shape, r2_err)
+        print(f"  adaptk {strategy} on {shape}: agg_err={agg_err:.2e} "
+              f"e_err={e_err:.2e} k_total={int(k_tot)}")
+    print("ADAPTK OK")
+
+
 def check_multipod():
     """Every compressor trains (loss decreases) on the 2x2x2 pod mesh;
     gaussiank additionally through every wire strategy (the gtopk rounds
@@ -271,4 +398,4 @@ def check_multipod():
 
 if __name__ == "__main__":
     {"eq2": check_eq2, "dense": check_dense, "gtopk": check_gtopk,
-     "multipod": check_multipod}[sys.argv[1]]()
+     "multipod": check_multipod, "adaptk": check_adaptk}[sys.argv[1]]()

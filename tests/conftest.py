@@ -2,11 +2,12 @@
 
 Provides a minimal in-repo fallback for ``hypothesis`` so the property
 tests stay collectable and meaningful in hermetic environments where the
-real package cannot be installed (CI installs the pinned real thing from
-pyproject.toml and this shim steps aside).  The fallback implements the
-tiny slice of the API the suite uses — ``@given`` over
-``strategies.integers`` plus ``@settings(max_examples=..., deadline=...)``
-— as a deterministic seeded sweep.
+real package cannot be installed (CI's ``properties`` job installs the
+pinned real thing from pyproject's ``[test]`` extra and this shim steps
+aside).  The fallback implements the tiny slice of the API the suite
+uses — ``@given`` over ``strategies.integers`` / ``sampled_from`` /
+``booleans`` plus ``@settings(max_examples=..., deadline=...)`` — as a
+deterministic seeded sweep.
 """
 from __future__ import annotations
 
@@ -28,6 +29,17 @@ def _install_hypothesis_stub():
 
         def draw(self, rng):
             return rng.randint(self.lo, self.hi)
+
+    class _SampledFrom:
+        def __init__(self, elements):
+            self.elements = list(elements)
+
+        def draw(self, rng):
+            return self.elements[rng.randrange(len(self.elements))]
+
+    class _Booleans:
+        def draw(self, rng):
+            return rng.random() < 0.5
 
     def given(*strategies):
         def deco(fn):
@@ -55,6 +67,8 @@ def _install_hypothesis_stub():
 
     st = types.ModuleType("hypothesis.strategies")
     st.integers = _Integers
+    st.sampled_from = _SampledFrom
+    st.booleans = _Booleans
     mod = types.ModuleType("hypothesis")
     mod.given = given
     mod.settings = settings

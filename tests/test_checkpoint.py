@@ -1,0 +1,93 @@
+"""npz checkpointing of the full TrainState — params, optimizer state,
+per-worker residuals (both levels) AND the adaptive-density controller
+state — plus the loader's validation behaviour.  (The train-loop
+resume-equivalence test lives in tests/test_system.py; this file covers
+the checkpoint subsystem itself.)"""
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import load_state, save_state
+from repro.core.adaptk import make_policy
+from repro.optim import sgd_momentum
+from repro.train import init_train_state
+
+
+def _params(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"w": jax.random.normal(k, (37, 11)),
+            "nest": {"b": jax.random.normal(k, (5,)),
+                     "stack": [jax.random.normal(k, (8, 3)),
+                               jax.random.normal(k, (4,))]}}
+
+
+def _full_state():
+    """TrainState with every optional piece populated: resid, resid2
+    (hierarchical) and the adaptk controller state."""
+    policy = make_policy("variance", ema=0.5)
+    state = init_train_state(_params(), sgd_momentum(0.9), workers=2,
+                             model_size=2, strategy="hierarchical",
+                             density_policy=policy)
+    # make the stateful leaves non-trivial so equality is meaningful
+    state["step"] = jnp.int32(7)
+    state["resid"] = jax.tree.map(
+        lambda e: e + jnp.arange(e.size, dtype=e.dtype).reshape(e.shape),
+        state["resid"])
+    state["adaptk"]["signal"] = jnp.asarray(
+        np.linspace(0.1, 1.0, state["adaptk"]["signal"].size), jnp.float32)
+    state["adaptk"]["count"] = jnp.int32(7)
+    return state
+
+
+def test_roundtrip_full_train_state(tmp_path):
+    state = _full_state()
+    assert "resid2" in state and "adaptk" in state
+    path = str(tmp_path / "state.npz")
+    save_state(path, state)
+    restored = load_state(path, jax.tree.map(jnp.zeros_like, state))
+    flat_a = jax.tree_util.tree_flatten_with_path(state)[0]
+    flat_b = jax.tree.leaves(restored)
+    assert len(flat_a) == len(flat_b)
+    for (p, a), b in zip(flat_a, flat_b):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=str(p))
+        assert np.asarray(a).dtype == np.asarray(b).dtype, p
+
+
+def test_save_is_atomic_no_tmp_left(tmp_path):
+    path = str(tmp_path / "sub" / "state.npz")   # exercises makedirs
+    save_state(path, _full_state())
+    assert os.path.exists(path)
+    assert not os.path.exists(path + ".tmp.npz")
+
+
+def test_load_validates_shapes(tmp_path):
+    state = _full_state()
+    path = str(tmp_path / "state.npz")
+    save_state(path, state)
+    bad = dict(state, step=jnp.zeros((3,), jnp.int32))
+    with pytest.raises(AssertionError):
+        load_state(path, bad)
+
+
+def test_load_missing_key_raises(tmp_path):
+    state = _full_state()
+    path = str(tmp_path / "state.npz")
+    save_state(path, state)
+    extra = dict(state, bonus=jnp.zeros((2,)))
+    with pytest.raises(KeyError):
+        load_state(path, extra)
+
+
+def test_load_casts_to_like_dtype(tmp_path):
+    """The loader restores into the structure's dtypes (the documented
+    contract: 'shape/dtype validated' — dtype by cast)."""
+    state = {"x": jnp.arange(6, dtype=jnp.float32)}
+    path = str(tmp_path / "state.npz")
+    save_state(path, state)
+    restored = load_state(path, {"x": jnp.zeros((6,), jnp.bfloat16)})
+    assert restored["x"].dtype == np.dtype("bfloat16") or \
+        restored["x"].dtype == jnp.bfloat16

@@ -48,3 +48,12 @@ def test_dense_dp_matches_single_device():
 def test_compressors_train_multipod():
     out = _run("multipod")
     assert "MULTIPOD OK" in out
+
+
+@pytest.mark.slow
+def test_adaptive_density_matches_simulation():
+    """Adaptive layer-wise density (core/adaptk) on 8 host devices ==
+    single-process simulation within 1e-7 for all three wire strategies,
+    with the k_total metric matching the allocator's exact budget."""
+    out = _run("adaptk")
+    assert "ADAPTK OK" in out

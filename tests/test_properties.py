@@ -1,0 +1,242 @@
+"""Property-based invariant suite for the three repo-wide contracts
+(ISSUE 4): the sentinel-codec roundtrip with duplicate scatter-add, the
+Eq. (2) conservation identity ``decode(values, idx) + e' == g + e``, and
+adaptive-density budget exactness ``sum(per-leaf k) == K_eff`` under
+every adaptk policy.
+
+Runs under real ``hypothesis`` when installed (CI's ``properties`` job,
+``--hypothesis-seed=0``) and under the deterministic conftest fallback
+stub otherwise — strategies are therefore kept to the stub's slice:
+``integers`` / ``sampled_from`` / ``booleans``, with all array content
+derived from integer seeds via numpy Generators.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import SENTINEL, adaptk, codec, compress_with_ef, \
+    get_compressor
+from repro.dist import aggregate
+
+SEEDS = st.integers(0, 2**31 - 1)
+# key-free compressors with exact reference conservation
+EF_NAMES = ("topk", "gaussiank", "gaussiank2", "histk", "trimmedk")
+
+
+# ---------------------------------------------------------------------------
+# contract 1: codec roundtrip, sentinel + duplicate scatter-add
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=50, deadline=None)
+@given(SEEDS, st.integers(1, 400), st.integers(1, 64))
+def test_codec_decode_roundtrip_with_duplicates(seed, d, k_cap):
+    """decode scatter-ADDS duplicate indices and skips sentinels — the
+    §3 contract merged/relayed pairs (gTop-k, hierarchical) rely on."""
+    rng = np.random.default_rng(seed)
+    k_cap = min(k_cap, d)
+    n_real = int(rng.integers(0, k_cap + 1))
+    idx = np.full((k_cap,), SENTINEL, np.int32)
+    idx[:n_real] = rng.integers(0, d, size=n_real)   # duplicates allowed
+    vals = np.where(idx == SENTINEL, 0.0,
+                    rng.normal(size=k_cap)).astype(np.float32)
+    expect = np.zeros((d,), np.float32)
+    np.add.at(expect, idx[idx != SENTINEL], vals[idx != SENTINEL])
+    out = codec.decode(jnp.asarray(vals), jnp.asarray(idx), d)
+    np.testing.assert_allclose(np.asarray(out), expect, rtol=1e-6,
+                               atol=1e-7)
+    base = rng.normal(size=d).astype(np.float32)
+    out2 = codec.decode_add(jnp.asarray(base), jnp.asarray(vals),
+                            jnp.asarray(idx))
+    np.testing.assert_allclose(np.asarray(out2), base + expect, rtol=1e-6,
+                               atol=1e-6)
+
+
+@settings(max_examples=50, deadline=None)
+@given(SEEDS, st.integers(1, 300), st.integers(1, 48), st.booleans())
+def test_compact_by_mask_encode_decode_roundtrip(seed, d, k_cap, empty):
+    """encode(compact) -> decode reconstructs exactly the kept mask
+    positions; surplus (overflow) mass is exactly the complement — the
+    conservation split every residual update is built from."""
+    rng = np.random.default_rng(seed)
+    k_cap = min(k_cap, d)
+    u = rng.normal(size=d).astype(np.float32)
+    mask = (np.zeros(d, bool) if empty
+            else rng.random(d) < rng.random())
+    values, indices = codec.compact_by_mask(jnp.asarray(u),
+                                            jnp.asarray(mask), k_cap)
+    real = np.asarray(indices)[np.asarray(indices) != SENTINEL]
+    assert len(set(real.tolist())) == len(real)   # duplicate-free encode
+    assert len(real) == min(int(mask.sum()), k_cap)
+    # sentinel slots carry value 0 (the codec contract)
+    assert not np.asarray(values)[np.asarray(indices) == SENTINEL].any()
+    dec = np.asarray(codec.decode(values, indices, d))
+    kept = np.zeros(d, bool)
+    kept[real] = True
+    np.testing.assert_array_equal(dec[kept], u[kept])
+    assert not dec[~kept].any()
+    # kept indices are the LOWEST masked ones (deterministic overflow)
+    masked = np.flatnonzero(mask)
+    np.testing.assert_array_equal(np.sort(real), masked[:len(real)])
+
+
+# ---------------------------------------------------------------------------
+# contract 2: Eq. (2) conservation through error feedback
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(SEEDS, st.integers(8, 500), st.integers(1, 64),
+       st.sampled_from(EF_NAMES), st.booleans(), st.booleans())
+def test_ef_conservation(seed, d, k, name, all_zero, bf16_grad):
+    """decode(values, idx) + e' == g + e for every compressor, including
+    all-zero gradients and bf16 gradient dtype (residual stays f32)."""
+    rng = np.random.default_rng(seed)
+    k = min(k, d)
+    spec = get_compressor(name)
+    g = np.zeros(d) if all_zero else rng.normal(size=d)
+    g = jnp.asarray(g, jnp.bfloat16 if bf16_grad else jnp.float32)
+    e = jnp.asarray(0.1 * rng.normal(size=d), jnp.float32)
+    values, indices, resid = compress_with_ef(g, spec, k, e=e,
+                                              backend="reference")
+    u = g.astype(jnp.float32) + e
+    dec = codec.decode(values.astype(jnp.float32),
+                       indices, d)
+    np.testing.assert_allclose(np.asarray(dec + resid), np.asarray(u),
+                               rtol=1e-6, atol=1e-6)
+    real = np.asarray(indices)[np.asarray(indices) != SENTINEL]
+    assert len(set(real.tolist())) == len(real)
+
+
+@settings(max_examples=10, deadline=None)
+@given(SEEDS, st.sampled_from((256, 1000)), st.integers(1, 24),
+       st.sampled_from(("gaussiank", "histk")), st.booleans())
+def test_fused_dynamic_k_matches_static_and_conserves(seed, d, k, name,
+                                                      all_zero):
+    """The fused pipeline with a *traced* k and reused pass-A stats is
+    bit-equal to the static-k pipeline computing its own stats, and the
+    Eq. (2) conservation identity holds (the dynamic-k audit of
+    DESIGN.md §9)."""
+    from repro.kernels.ef_fused import fused_compress_ef, fused_pass_a
+
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(np.zeros(d) if all_zero
+                    else 0.01 * rng.normal(size=d), jnp.float32)
+    e = jnp.asarray(0.001 * rng.normal(size=d), jnp.float32)
+    k_cap = get_compressor(name).k_cap(24, d)   # static ceiling capacity
+    v1, i1, e1 = fused_compress_ef(g, e, name, k, k_cap=k_cap)
+    stats = fused_pass_a(g, e, name)
+    v2, i2, e2 = fused_compress_ef(g, e, name, jnp.int32(k), k_cap=k_cap,
+                                   stats=stats)
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_array_equal(np.asarray(e1), np.asarray(e2))
+    dec = codec.decode(v2, i2, d)
+    np.testing.assert_allclose(np.asarray(dec + e2), np.asarray(g + e),
+                               rtol=1e-6, atol=1e-8)
+
+
+@settings(max_examples=15, deadline=None)
+@given(SEEDS, st.integers(1, 40),
+       st.sampled_from(adaptk.DYNAMIC_COMPRESSORS), st.integers(1, 4))
+def test_dynamic_worker_conservation(seed, k, name, model_size):
+    """compress_worker_dynamic keeps the row-wise Eq. (2) identity for a
+    traced leaf budget, for every dynamic-capable compressor and model
+    split (the aggregation layer's worker contract)."""
+    rng = np.random.default_rng(seed)
+    d = int(rng.integers(32, 400))
+    spec = get_compressor(name)
+    d_pad, d_row = aggregate.flat_dims(d, model_size)
+    k = min(k, d)
+    k_hi_row = min(d_row, -(-4 * k // model_size))
+    k_cap = min(d_row, spec.k_cap(max(1, k_hi_row), d_row))
+    g = jnp.asarray(np.pad(0.1 * rng.normal(size=d), (0, d_pad - d)),
+                    jnp.float32)
+    e = jnp.asarray(0.01 * rng.normal(size=d_pad), jnp.float32)
+    values, indices, new_e = aggregate.compress_worker_dynamic(
+        g, e, spec, jnp.int32(k), model_size, jax.random.PRNGKey(seed),
+        k_cap=k_cap, backend="reference")
+    assert values.shape == indices.shape == (model_size, k_cap)
+    dec = jax.vmap(lambda v, i: codec.decode(v, i, d_row))(
+        values, indices).reshape(-1)
+    np.testing.assert_allclose(np.asarray(dec + new_e), np.asarray(g + e),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# contract 3: adaptive budget exactness under every policy
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(SEEDS, st.integers(1, 16), st.booleans())
+def test_allocate_budget_exact(seed, n, zero_weights):
+    """sum(per-leaf k) == K_eff == clip(K_total, sum(floors),
+    sum(ceilings)) EXACTLY, with every k inside its clamp — for random
+    bounds, weights (including all-zero) and budgets on both sides of
+    the feasible range."""
+    rng = np.random.default_rng(seed)
+    lo = rng.integers(1, 60, n)
+    hi = lo + rng.integers(0, 800, n)
+    K = int(rng.integers(0, hi.sum() + 500))
+    w = (np.zeros(n) if zero_weights
+         else rng.random(n) * (rng.random(n) > 0.25))
+    k, K_eff = adaptk.allocate(K, jnp.asarray(w, jnp.float32),
+                               lo.tolist(), hi.tolist())
+    k, K_eff = np.asarray(k), int(K_eff)
+    assert K_eff == int(np.clip(K, lo.sum(), hi.sum()))
+    assert int(k.sum()) == K_eff
+    assert (k >= lo).all() and (k <= hi).all()
+    # deterministic: identical call, identical allocation
+    k2, _ = adaptk.allocate(K, jnp.asarray(w, jnp.float32),
+                            lo.tolist(), hi.tolist())
+    np.testing.assert_array_equal(k, np.asarray(k2))
+
+
+@settings(max_examples=30, deadline=None)
+@given(SEEDS, st.integers(2, 10), st.sampled_from(adaptk.POLICIES),
+       st.integers(0, 40))
+def test_policy_budget_exact_over_warmup(seed, n, policy_name, step):
+    """End-to-end controller property: moments -> leaf_signal -> warmup
+    budget -> allocate stays budget-exact at every warmup step for every
+    policy (the acceptance-criterion form of contract 3)."""
+    rng = np.random.default_rng(seed)
+    dims = rng.integers(8, 5000, n).tolist()
+    ratio = float(rng.uniform(0.001, 0.05))
+    policy = adaptk.make_policy(policy_name, warmup_steps=20,
+                                warmup_mult=8.0)
+    # random per-leaf moments (s, sq >= s^2/d, mx >= 0)
+    sig = []
+    for d in dims:
+        s = float(rng.normal() * d * 0.01)
+        sq = s * s / d + float(rng.random() * d * 0.1)
+        mx = float(rng.random())
+        sig.append(adaptk.leaf_signal(policy_name, d, s, sq, mx))
+    lo, hi = zip(*(adaptk.leaf_bounds(d, ratio, policy) for d in dims))
+    K = adaptk.budget(dims, ratio, policy, jnp.int32(step))
+    k, K_eff = adaptk.allocate(K, jnp.stack(sig), list(lo), list(hi))
+    k = np.asarray(k)
+    assert int(k.sum()) == int(K_eff)
+    assert int(K_eff) == int(np.clip(int(K), sum(lo), sum(hi)))
+    assert (k >= np.asarray(lo)).all() and (k <= np.asarray(hi)).all()
+
+
+def test_warmup_budget_monotone_decay():
+    """The DGC warmup multiplier decays geometrically from warmup_mult
+    to exactly 1 and stays there."""
+    from repro.optim.schedules import density_warmup
+    f = density_warmup(16.0, 10)
+    vals = [float(f(jnp.int32(t))) for t in range(14)]
+    assert abs(vals[0] - 16.0) < 1e-4
+    assert all(a >= b - 1e-6 for a, b in zip(vals, vals[1:]))
+    assert abs(vals[10] - 1.0) < 1e-6 and abs(vals[13] - 1.0) < 1e-6
+
+
+def test_select_dynamic_rejects_static_only_compressors():
+    spec = get_compressor("dgck")
+    with pytest.raises(ValueError, match="dynamic-k"):
+        adaptk.select_dynamic(spec, jnp.ones((8,)), jnp.int32(2), 4,
+                              jax.random.PRNGKey(0))
