@@ -21,6 +21,9 @@ Additionally reports, per architecture and with no dry-run needed:
   scatter-add, re-select top-k_cap, re-encode) against the allgather
   path's P-pair decode-average — the compute price paid for the wire
   reduction.
+* the collectives-per-step column (DESIGN.md §10): the per-leaf loop's
+  L (allgather) / L·log2(P) (gTop-k) dispatches against the bucketed
+  pipeline's 1 / log2(P) — the latency term the flat bucket removes.
 """
 from __future__ import annotations
 
@@ -108,6 +111,35 @@ def _merge_cost_rows(d=1 << 20):
     ]
 
 
+def _collectives_rows(limit=None):
+    """Collectives-per-step per architecture: the per-leaf loop pays one
+    codec-pair collective chain per gradient leaf (L all-gathers;
+    L·log2(P) ppermute rounds for gTop-k), the bucketed pipeline
+    (dist/layout.py, DESIGN.md §10) exactly one per wire level — L -> 1
+    (allgather) and L·log2(P) -> log2(P) (gTop-k), independent of model
+    depth."""
+    import jax
+
+    from repro.dist.layout import collective_count
+    from repro.models import init_params
+
+    rows = []
+    for name, cfg in sorted(ARCHS.items())[:limit]:
+        shapes = jax.eval_shape(lambda k: init_params(cfg, k),
+                                jax.random.PRNGKey(0))
+        L = len(jax.tree.leaves(shapes))
+        ag_pl = collective_count("allgather", P_WORKERS, leaves=L)
+        gt_pl = collective_count("gtopk", P_WORKERS, leaves=L)
+        ag_b = collective_count("allgather", P_WORKERS)
+        gt_b = collective_count("gtopk", P_WORKERS)
+        rows.append((f"table2/collectives/{name}", 0.0,
+                     f"leaves={L};"
+                     f"allgather={ag_pl}->{ag_b};"
+                     f"gtopk={gt_pl}->{gt_b};"
+                     f"bucketed_red={ag_pl / ag_b:.0f}x"))
+    return rows
+
+
 def _adaptk_rows(limit=None):
     """Adaptive vs fixed-k wire accounting per architecture.
 
@@ -153,6 +185,7 @@ def _adaptk_rows(limit=None):
 
 def run(smoke: bool = False):
     rows = _closed_form_rows(limit=3 if smoke else None)
+    rows += _collectives_rows(limit=3 if smoke else None)
     rows += _adaptk_rows(limit=3 if smoke else None)
     rows += _merge_cost_rows(d=1 << 16 if smoke else 1 << 20)
     path = "experiments/dryrun_single.json"

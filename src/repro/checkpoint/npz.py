@@ -1,16 +1,27 @@
 """Flat-key npz checkpointing of arbitrary pytrees (params, optimizer
 state, error-feedback residuals, step).  Arrays are gathered to host —
 adequate for the CPU container; on a real cluster this module is the
-single seam to swap for a tensorstore/OCDBT backend."""
+single seam to swap for a tensorstore/OCDBT backend.
+
+Residual migration (DESIGN.md §10): checkpoints written before the flat
+bucketed pipeline store one ``resid/<leaf-path>`` array per gradient
+leaf.  ``load_state(..., layout=...)`` packs those legacy arrays into
+the flat ``(workers, model_size * d_row_total)`` buffer the bucketed
+TrainState expects — bit-equal contents, validated loudly (missing
+leaves, wrong ``d_pad``, mismatched worker dims all raise).
+"""
 from __future__ import annotations
 
 import os
-from typing import Any
+from typing import Any, Optional
 
 import jax
 import numpy as np
 
 _SEP = "/"
+
+# TrainState keys whose per-leaf legacy form migrates into a flat bucket
+_BUCKET_KEYS = ("resid", "resid2")
 
 
 def _flatten(tree) -> dict:
@@ -29,16 +40,51 @@ def save_state(path: str, state: Any) -> None:
     os.replace(tmp, path)
 
 
-def load_state(path: str, like: Any) -> Any:
-    """Restore into the structure of ``like`` (shape/dtype validated)."""
+def _migrate_legacy_residual(flat: dict, key: str, like_leaf, layout):
+    """Pack a legacy per-leaf residual (``<key>/<leaf-path>`` npz entries)
+    into the flat bucket ``like_leaf`` expects.  The segment names of the
+    layout use the SAME '/'-join convention as the checkpoint keys, so
+    lookup is exact; any missing or mis-shaped leaf fails loudly."""
+    from repro.dist.layout import pack_residual_arrays
+
+    arrays = []
+    for seg in layout.segments:
+        legacy = f"{key}{_SEP}{seg.name}"
+        if legacy not in flat:
+            raise KeyError(
+                f"checkpoint has neither a flat {key!r} buffer nor the "
+                f"legacy per-leaf entry {legacy!r} (truncated or "
+                "incompatible checkpoint)")
+        arrays.append(flat[legacy])
+    packed = pack_residual_arrays(layout, arrays)
+    if packed.shape != like_leaf.shape:
+        raise ValueError(
+            f"migrated {key!r} has shape {packed.shape}, state expects "
+            f"{like_leaf.shape} (layout/checkpoint mismatch)")
+    return packed
+
+
+def load_state(path: str, like: Any, *, layout: Optional[Any] = None) -> Any:
+    """Restore into the structure of ``like`` (shape/dtype validated).
+
+    ``layout`` (a ``dist/layout.BucketLayout``) enables the legacy
+    migration shim: when ``like`` holds a flat bucketed residual but the
+    checkpoint predates the bucketed pipeline (per-leaf ``resid/...``
+    entries), the legacy leaves are packed into the flat buffer with
+    bit-equal contents.  Without ``layout`` a legacy checkpoint fails
+    with a KeyError, as before.
+    """
     with np.load(path) as data:
         flat = dict(data)
     paths, treedef = jax.tree_util.tree_flatten_with_path(like)
     leaves = []
-    for path, leaf in paths:
+    for path_, leaf in paths:
         key = _SEP.join(
-            str(getattr(e, "key", getattr(e, "idx", e))) for e in path)
-        arr = flat[key]
+            str(getattr(e, "key", getattr(e, "idx", e))) for e in path_)
+        if key not in flat and layout is not None and key in _BUCKET_KEYS:
+            arr = _migrate_legacy_residual(flat, key, leaf, layout)
+        else:
+            arr = flat[key]
         assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
         leaves.append(arr.astype(leaf.dtype))
     return jax.tree_util.tree_unflatten(treedef, leaves)

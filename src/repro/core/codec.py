@@ -87,6 +87,19 @@ def decode_add(dense: jax.Array, values: jax.Array, indices: jax.Array) -> jax.A
     )
 
 
+def offset_indices(indices: jax.Array, offset: int) -> jax.Array:
+    """Shift the real indices of a pair by ``offset``, sentinel-aware.
+
+    The bucket-globalization primitive (DESIGN.md §10): a leaf segment's
+    row-local indices become bucket-global by adding the segment's static
+    column offset; sentinel slots stay ``SENTINEL`` so decoders keep
+    skipping them.  Decoding the concatenated wire block of several
+    segments then scatters each segment into its own disjoint column
+    range — elementwise equal to decoding every segment on its own.
+    """
+    return jnp.where(indices == SENTINEL, SENTINEL, indices + offset)
+
+
 def nnz(indices: jax.Array) -> jax.Array:
     """Number of real (non-sentinel) slots in a compressed pair.
 

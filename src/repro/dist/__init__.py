@@ -2,26 +2,41 @@
 the shard_map version-compat shims.
 
 ``sharding``   per-leaf PartitionSpec rules for the ``model`` axis plus the
-               serve-time data-axis layouts (params, caches).
+               serve-time data-axis layouts (params, caches) and the
+               TrainState specs entering the shard_map region.
+``layout``     the static ``BucketLayout``: every leaf's padded rows and
+               codec capacity packed into one flat bucket / one wire
+               block with static segment offsets (DESIGN.md §10).
 ``aggregate``  paper Eq. (2) at scale: per-worker error-feedback
                compression, then one of three wire strategies over the
                data axes — flat sparse all-gather, two-level
                pod -> global reduction, or gTop-k recursive doubling
-               (``STRATEGIES``; DESIGN.md §3-§4, §7).
+               (``STRATEGIES``; DESIGN.md §3-§4, §7) — dispatched either
+               per leaf (``aggregate_compressed``) or as ONE collective
+               per wire level per step (``aggregate_bucketed``).
 ``compat``     jax.shard_map partial-auto API across jax versions (plus
                the ppermute shim the gTop-k rounds ride on).
 """
-from repro.dist import aggregate, compat, sharding
-from repro.dist.aggregate import (STRATEGIES, aggregate_compressed,
-                                  aggregate_dense, gtopk_simulate,
+from repro.dist import aggregate, compat, layout, sharding
+from repro.dist.aggregate import (STRATEGIES, aggregate_bucketed,
+                                  aggregate_compressed, aggregate_dense,
+                                  bucket_compress, gtopk_simulate,
                                   init_residuals, resolve_strategy,
                                   strategy_wire_pairs)
-from repro.dist.sharding import cache_specs, param_spec, param_specs
+from repro.dist.layout import (BucketLayout, build_layout, collective_count,
+                               init_flat_residual, leaf_key_salt,
+                               pack_grads, pack_residual_arrays,
+                               unpack_residual_arrays, unpack_tree)
+from repro.dist.sharding import (cache_specs, param_spec, param_specs,
+                                 train_state_specs)
 
 __all__ = [
-    "aggregate", "compat", "sharding",
-    "STRATEGIES", "aggregate_compressed", "aggregate_dense",
-    "gtopk_simulate", "init_residuals", "resolve_strategy",
-    "strategy_wire_pairs",
-    "cache_specs", "param_spec", "param_specs",
+    "aggregate", "compat", "layout", "sharding",
+    "STRATEGIES", "aggregate_bucketed", "aggregate_compressed",
+    "aggregate_dense", "bucket_compress", "gtopk_simulate",
+    "init_residuals", "resolve_strategy", "strategy_wire_pairs",
+    "BucketLayout", "build_layout", "collective_count",
+    "init_flat_residual", "leaf_key_salt", "pack_grads",
+    "pack_residual_arrays", "unpack_residual_arrays", "unpack_tree",
+    "cache_specs", "param_spec", "param_specs", "train_state_specs",
 ]

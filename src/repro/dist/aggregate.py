@@ -37,6 +37,19 @@ Step 3-4 is the ``strategy`` choice (DESIGN.md §3, §7):
                     workers' residuals (divided by the replica count of
                     that merge) so Eq. (2) conservation holds globally.
 
+TWO dispatch granularities implement the same semantics (DESIGN.md §10):
+
+``aggregate_compressed``  the per-leaf loop — one collective chain per
+                          gradient leaf.  Reference/teaching path and
+                          bit-equality oracle.
+``aggregate_bucketed``    the flat bucketed pipeline over a static
+                          ``dist/layout.BucketLayout``: selection still
+                          runs per leaf segment (bit-identical), but the
+                          wire is ONE concatenated codec block per level
+                          per step — 1 all-gather (allgather), 2
+                          (hierarchical), log2(W) merged ppermute rounds
+                          total (gtopk), independent of leaf count.
+
 ``momentum_correction > 0`` enables the DGC §3.1 client-side momentum
 blend: ``v = mu*v + g; u = e + v``; coordinates that make it onto the
 wire are zeroed in ``v`` (``resid2`` doubles as the ``v`` state — it is
@@ -48,10 +61,14 @@ pmean'd allocation signal → budget-exact redistribution of the global
 ``K_total(step)`` into per-leaf *traced* budgets, with every static
 capacity (codec ``k_cap``, staging, wire volume) derived from the
 policy's ceiling clamp.
+
+Per-leaf RNG keys fold in a *stable hash of the leaf path*
+(``layout.leaf_key_salt``), not the flatten index — adding a parameter
+to the model must not reshuffle every other leaf's randk/dgck sampling,
+and the two dispatch granularities must key identically.
 """
 from __future__ import annotations
 
-import math
 from typing import Optional, Tuple
 
 import jax
@@ -61,16 +78,21 @@ from repro.core import adaptk, codec
 from repro.core.compressors import CompressorSpec
 from repro.core.error_feedback import resolve_backend
 from repro.dist import compat
+# geometry + wire model live in dist/layout.py (single source for both
+# dispatch granularities); re-exported here for API compatibility
+from repro.dist.layout import (STRATEGIES, BucketLayout,  # noqa: F401
+                               _log2_exact, collective_count, flat_dims,
+                               leaf_key_salt, leaf_path_name, leaf_plan,
+                               leaf_plan_adaptive, pack_grads,
+                               resolve_strategy, strategy_wire_pairs,
+                               unpack_tree)
+from repro.kernels.ef_fused.segmented import (rows_compress_ef, rows_pass_a,
+                                              segmented_compress_ef,
+                                              segmented_pass_a)
 
 # ---------------------------------------------------------------------------
 # residual layout
 # ---------------------------------------------------------------------------
-
-
-def flat_dims(size: int, model_size: int) -> Tuple[int, int]:
-    """(padded flat length, per-model-shard row length) for a leaf."""
-    d_pad = -(-size // model_size) * model_size
-    return d_pad, d_pad // model_size
 
 
 def init_residuals(params, model_size: int, dtype=jnp.float32):
@@ -78,46 +100,15 @@ def init_residuals(params, model_size: int, dtype=jnp.float32):
 
     Each leaf is ``(d_pad,)`` with ``d_pad = ceil(size/model_size) *
     model_size`` so the vector reshapes evenly into per-model-shard rows.
-    The caller stacks a leading worker axis (see train/state.py).
+    The caller stacks a leading worker axis (see train/state.py).  The
+    bucketed pipeline stores the same values in ONE flat buffer instead
+    (``layout.init_flat_residual``).
     """
     def zero(p):
         d_pad, _ = flat_dims(p.size, model_size)
         return jnp.zeros((d_pad,), dtype)
 
     return jax.tree.map(zero, params)
-
-
-def leaf_plan(size: int, model_size: int, ratio: float,
-              spec: CompressorSpec) -> Tuple[int, int, int, int]:
-    """(d_pad, d_row, k_row, k_cap_row) for one leaf.
-
-    ``k = max(1, ceil(ratio * size))`` global budget, split evenly over
-    the model shards; the row capacity is the compressor's own
-    over-selection cap (e.g. 4k/3 for Gaussian-k).
-    """
-    d_pad, d_row = flat_dims(size, model_size)
-    k = max(1, math.ceil(ratio * size))
-    k_row = min(d_row, max(1, -(-k // model_size)))
-    k_cap = min(d_row, spec.k_cap(k_row, d_row))
-    return d_pad, d_row, k_row, k_cap
-
-
-def leaf_plan_adaptive(size: int, model_size: int, ratio: float,
-                       spec: CompressorSpec, policy: adaptk.DensityPolicy):
-    """(d_pad, d_row, k_lo, k_hi, k_cap_row) for one leaf under an
-    adaptive density policy.
-
-    ``[k_lo, k_hi]`` are the leaf-level integer clamps the allocator
-    respects; every static shape — the codec row capacity ``k_cap_row``
-    and, downstream, staging widths and wire volume — derives from the
-    *ceiling* ``k_hi``, so the per-step traced ``k`` can move anywhere
-    inside the clamp without touching a single buffer shape.
-    """
-    d_pad, d_row = flat_dims(size, model_size)
-    k_lo, k_hi = adaptk.leaf_bounds(size, ratio, policy)
-    k_hi_row = min(d_row, max(1, -(-k_hi // model_size)))
-    k_cap = min(d_row, spec.k_cap(k_hi_row, d_row))
-    return d_pad, d_row, k_lo, k_hi, k_cap
 
 
 # ---------------------------------------------------------------------------
@@ -138,39 +129,66 @@ def _decode_rows(values: jax.Array, indices: jax.Array, d_row: int,
         lambda v, i: codec.decode(v.astype(dtype), i, d_row))(values, indices)
 
 
+def _wire_cast_fixup(values, indices, new_e_rows, codec_dtype):
+    """Down-cast wire values and fold the cast error into the residual
+    with a k-sized scatter-add (``e' += decode(values − cast(values))``)
+    — bit-equal to the reference's dense ``u − decode(cast(values))``.
+    Shared by the per-leaf and bucketed fused paths."""
+    if codec_dtype is None:
+        return values, indices, new_e_rows
+    wire = values.astype(codec_dtype)
+    diff = values - wire.astype(values.dtype)
+    new_e_rows = jax.vmap(codec.decode_add)(new_e_rows, diff, indices)
+    return wire, indices, new_e_rows
+
+
 def _compress_rows_fused(g_rows: jax.Array, e_rows: jax.Array,
                          spec: CompressorSpec, k_row, k_cap: int,
                          codec_dtype=None, row_stats=None):
-    """Fused EF compression of ``(model_size, d_row)`` rows (DESIGN.md §8).
-
-    One fused pipeline per model-shard row — ``u = e + g`` accumulates
-    inside the kernels and the new residual is written by the compaction
-    pass, so the reference path's dense decode + subtract never run.
-    The ``codec_dtype`` down-cast error is folded back into the residual
-    with a k-sized scatter-add (``e' += decode(values − cast(values))``)
-    instead of a second dense pass; the result is bit-equal to the
-    reference's ``u − decode(cast(values))``.
-
-    ``k_row`` may be a traced scalar when ``row_stats`` (per-row pass-A
-    tuples from ``fused_pass_a``) is supplied or the compressor's
-    threshold math accepts it — the adaptive-density path (DESIGN.md §9).
-    """
-    from repro.kernels.ef_fused import fused_compress_ef
-
-    outs = [fused_compress_ef(g_rows[r], e_rows[r], spec.name, k_row,
-                              k_cap=k_cap,
-                              stats=None if row_stats is None
-                              else row_stats[r])
-            for r in range(g_rows.shape[0])]
-    values = jnp.stack([o[0] for o in outs])
-    indices = jnp.stack([o[1] for o in outs])
-    new_e_rows = jnp.stack([o[2] for o in outs])
-    if codec_dtype is not None:
-        wire = values.astype(codec_dtype)
-        diff = values - wire.astype(values.dtype)
-        new_e_rows = jax.vmap(codec.decode_add)(new_e_rows, diff, indices)
-        values = wire
+    """Fused EF compression of ``(model_size, d_row)`` rows (DESIGN.md §8)
+    — ``kernels/ef_fused.rows_compress_ef`` plus the wire-dtype fixup."""
+    values, indices, new_e_rows = rows_compress_ef(
+        g_rows, e_rows, spec.name, k_row, k_cap=k_cap, row_stats=row_stats)
+    values, indices, new_e_rows = _wire_cast_fixup(values, indices,
+                                                   new_e_rows, codec_dtype)
     return values, indices, new_e_rows
+
+
+def _compress_rows(g_rows: jax.Array, e_rows: jax.Array,
+                   spec: CompressorSpec, k_row: int, k_cap: int, key, *,
+                   codec_dtype=None, momentum: float = 0.0, v_rows=None,
+                   backend: str = "auto"):
+    """Row-level fixed-k EF compression of one ``(model_size, d_row)``
+    block — the single code path behind both :func:`compress_worker`
+    (per-leaf) and :func:`bucket_compress` (bucketed segment), which is
+    what makes the two dispatch granularities bit-identical.
+
+    Returns ``(values, indices, new_e_rows, new_v_rows)`` (``new_v_rows``
+    is ``None`` unless ``momentum > 0``).
+    """
+    if momentum == 0.0 and resolve_backend(backend, spec):
+        values, indices, new_e_rows = _compress_rows_fused(
+            g_rows, e_rows, spec, k_row, k_cap, codec_dtype)
+        return values, indices, new_e_rows, None
+    if momentum > 0.0:
+        v_rows = momentum * v_rows + g_rows
+        u_rows = e_rows + v_rows
+    else:
+        u_rows = e_rows + g_rows
+    d_row = u_rows.shape[1]
+    values, indices = _select_rows(spec, u_rows, k_row, key)
+    if codec_dtype is not None:
+        values = values.astype(codec_dtype)
+    decoded = _decode_rows(values, indices, d_row, u_rows.dtype)
+    new_e_rows = u_rows - decoded
+    new_v_rows = None
+    if momentum > 0.0:
+        # wire-exchanged coordinates stop accumulating velocity (DGC §3.1)
+        hit = _decode_rows(jnp.ones_like(values, u_rows.dtype), indices,
+                           d_row, u_rows.dtype)
+        keep = 1.0 - jnp.clip(hit, 0.0, 1.0)
+        new_v_rows = v_rows * keep
+    return values, indices, new_e_rows, new_v_rows
 
 
 def compress_worker(g: jax.Array, e: jax.Array, spec: CompressorSpec,
@@ -203,38 +221,29 @@ def compress_worker(g: jax.Array, e: jax.Array, spec: CompressorSpec,
     d = g.size
     d_pad, d_row, k_row, k_cap = leaf_plan(d, model_size, ratio, spec)
     g_flat = jnp.pad(g.reshape(-1), (0, d_pad - d)).astype(e.dtype)
-    if momentum == 0.0 and resolve_backend(backend, spec):
-        values, indices, new_e_rows = _compress_rows_fused(
-            g_flat.reshape(model_size, d_row), e.reshape(model_size, d_row),
-            spec, k_row, k_cap, codec_dtype)
-        return values, indices, new_e_rows.reshape(-1).astype(e.dtype), None
-    if momentum > 0.0:
-        v = momentum * v + g_flat
-        u = e + v
-    else:
-        u = e + g_flat
-    u_rows = u.reshape(model_size, d_row)
-
-    values, indices = _select_rows(spec, u_rows, k_row, key)
-    if codec_dtype is not None:
-        values = values.astype(codec_dtype)
-    decoded = _decode_rows(values, indices, d_row, u.dtype)
-    new_e = (u_rows - decoded).reshape(-1).astype(e.dtype)
-
-    new_v = None
-    if momentum > 0.0:
-        # wire-exchanged coordinates stop accumulating velocity (DGC §3.1)
-        hit = _decode_rows(jnp.ones_like(values, u.dtype), indices, d_row,
-                           u.dtype)
-        keep = 1.0 - jnp.clip(hit, 0.0, 1.0)
-        new_v = (v.reshape(model_size, d_row) * keep).reshape(-1).astype(
-            e.dtype)
+    values, indices, new_e_rows, new_v_rows = _compress_rows(
+        g_flat.reshape(model_size, d_row), e.reshape(model_size, d_row),
+        spec, k_row, k_cap, key, codec_dtype=codec_dtype, momentum=momentum,
+        v_rows=(v.reshape(model_size, d_row) if momentum > 0.0 else None),
+        backend=backend)
+    new_e = new_e_rows.reshape(-1).astype(e.dtype)
+    new_v = (new_v_rows.reshape(-1).astype(e.dtype)
+             if new_v_rows is not None else None)
     return values, indices, new_e, new_v
 
 
 # ---------------------------------------------------------------------------
 # adaptive-density worker path (pure pieces: unit-testable without a mesh)
 # ---------------------------------------------------------------------------
+
+
+def _stats_reduce(row_stats):
+    """Leaf-level ``(s, sq, mx)`` reduction of per-row pass-A tuples —
+    the adaptk allocation signal's input (shared by both granularities)."""
+    s = sum(st[0] for st in row_stats)
+    sq = sum(st[1] for st in row_stats)
+    mx = jnp.max(jnp.stack([st[2] for st in row_stats]))
+    return s, sq, mx
 
 
 def pass_a_stats_rows(g_rows: jax.Array, e_rows: jax.Array, name: str,
@@ -250,16 +259,37 @@ def pass_a_stats_rows(g_rows: jax.Array, e_rows: jax.Array, name: str,
     (unpadded) leaf.
     """
     if fused:
-        from repro.kernels.ef_fused import fused_pass_a
-
-        row_stats = [fused_pass_a(g_rows[r], e_rows[r], name)
-                     for r in range(g_rows.shape[0])]
-        s = sum(st[0] for st in row_stats)
-        sq = sum(st[1] for st in row_stats)
-        mx = jnp.max(jnp.stack([st[2] for st in row_stats]))
-        return row_stats, (s, sq, mx)
+        row_stats = rows_pass_a(g_rows, e_rows, name)
+        return row_stats, _stats_reduce(row_stats)
     u = g_rows.astype(jnp.result_type(g_rows.dtype, e_rows.dtype)) + e_rows
     return None, (jnp.sum(u), jnp.sum(u * u), jnp.max(jnp.abs(u)))
+
+
+def _compress_rows_dynamic(g_rows: jax.Array, e_rows: jax.Array,
+                           spec: CompressorSpec, k, k_cap: int, key, *,
+                           codec_dtype=None, backend: str = "auto",
+                           row_stats=None):
+    """Row-level dynamic-k EF compression (traced per-leaf budget ``k``)
+    — shared by :func:`compress_worker_dynamic` and the bucketed path."""
+    model_size, d_row = g_rows.shape
+    k_row = jnp.clip((k + model_size - 1) // model_size, 1, d_row)
+    if resolve_backend(backend, spec):
+        return _compress_rows_fused(g_rows, e_rows, spec, k_row, k_cap,
+                                    codec_dtype, row_stats)
+    u_rows = (g_rows.astype(jnp.result_type(g_rows.dtype, e_rows.dtype))
+              + e_rows)
+    if spec.needs_key:
+        keys = jax.random.split(key, model_size)
+        values, indices = jax.vmap(
+            lambda r, kk: adaptk.select_dynamic(spec, r, k_row, k_cap, kk))(
+                u_rows, keys)
+    else:
+        values, indices = jax.vmap(
+            lambda r: adaptk.select_dynamic(spec, r, k_row, k_cap))(u_rows)
+    if codec_dtype is not None:
+        values = values.astype(codec_dtype)
+    decoded = _decode_rows(values, indices, d_row, u_rows.dtype)
+    return values, indices, u_rows - decoded
 
 
 def compress_worker_dynamic(g_flat: jax.Array, e: jax.Array,
@@ -282,77 +312,16 @@ def compress_worker_dynamic(g_flat: jax.Array, e: jax.Array,
     correction is fixed-k only and handled by the caller.
     """
     d_row = g_flat.size // model_size
-    k_row = jnp.clip((k + model_size - 1) // model_size, 1, d_row)
-    g_rows = g_flat.reshape(model_size, d_row)
-    e_rows = e.reshape(model_size, d_row)
-    if resolve_backend(backend, spec):
-        values, indices, new_e_rows = _compress_rows_fused(
-            g_rows, e_rows, spec, k_row, k_cap, codec_dtype, row_stats)
-        return values, indices, new_e_rows.reshape(-1).astype(e.dtype)
-    u_rows = (g_rows.astype(jnp.result_type(g_rows.dtype, e.dtype))
-              + e_rows)
-    if spec.needs_key:
-        keys = jax.random.split(key, model_size)
-        values, indices = jax.vmap(
-            lambda r, kk: adaptk.select_dynamic(spec, r, k_row, k_cap, kk))(
-                u_rows, keys)
-    else:
-        values, indices = jax.vmap(
-            lambda r: adaptk.select_dynamic(spec, r, k_row, k_cap))(u_rows)
-    if codec_dtype is not None:
-        values = values.astype(codec_dtype)
-    decoded = _decode_rows(values, indices, d_row, u_rows.dtype)
-    new_e = (u_rows - decoded).reshape(-1).astype(e.dtype)
-    return values, indices, new_e
+    values, indices, new_e_rows = _compress_rows_dynamic(
+        g_flat.reshape(model_size, d_row), e.reshape(model_size, d_row),
+        spec, k, k_cap, key, codec_dtype=codec_dtype, backend=backend,
+        row_stats=row_stats)
+    return values, indices, new_e_rows.reshape(-1).astype(e.dtype)
 
 
 # ---------------------------------------------------------------------------
 # gTop-k recursive doubling (pure pieces: unit-testable without a mesh)
 # ---------------------------------------------------------------------------
-
-STRATEGIES = ("allgather", "gtopk", "hierarchical")
-
-
-def _log2_exact(n: int, what: str = "world size") -> int:
-    """log2 of a power of two; raises for anything else (the XOR pairing
-    of the recursive-doubling tree needs exact halving at every round)."""
-    if n < 1 or n & (n - 1):
-        raise ValueError(
-            f"gtopk strategy needs a power-of-two {what}, got {n}; "
-            "use strategy='allgather' on ragged meshes")
-    return n.bit_length() - 1
-
-
-def resolve_strategy(strategy: str, hierarchical: bool = False) -> str:
-    """Normalize the legacy ``hierarchical=True`` flag into the strategy
-    vocabulary (single source of the precedence rule for every layer and
-    CLI): it promotes the default ``"allgather"`` only — an explicitly
-    chosen strategy always wins.  Raises on unknown strategies."""
-    if hierarchical and strategy == "allgather":
-        return "hierarchical"
-    if strategy not in STRATEGIES:
-        raise ValueError(f"unknown strategy {strategy!r}; have {STRATEGIES}")
-    return strategy
-
-
-def strategy_wire_pairs(strategy: str, world: int, n_pods: int = 1) -> int:
-    """Number of ``(k_cap,)`` codec pairs a worker moves per leaf row.
-
-    The compile-time wire-volume model behind the ``comm_bits_sparse`` /
-    ``wire_bytes`` metrics and ``benchmarks/table2_scaling.py``:
-
-      allgather     ``W``               (every worker's pair lands on
-                                        every worker)
-      hierarchical  ``W_inner + P_pod`` (pod gather + pod-mean gather)
-      gtopk         ``log2(W)``         (one pair sent per halving round)
-    """
-    if strategy == "gtopk":
-        return _log2_exact(world)
-    if strategy == "hierarchical":
-        return max(1, world // n_pods) + n_pods
-    if strategy == "allgather":
-        return world
-    raise ValueError(f"unknown strategy {strategy!r}; have {STRATEGIES}")
 
 
 def encode_rows_topk(dense_rows: jax.Array, k_cap: int, codec_dtype=None):
@@ -377,6 +346,23 @@ def encode_rows_topk(dense_rows: jax.Array, k_cap: int, codec_dtype=None):
     if codec_dtype is not None:
         values = values.astype(codec_dtype)
     return values, indices
+
+
+def encode_bucket_topk(dense_bucket: jax.Array, layout: BucketLayout,
+                       codec_dtype=None):
+    """Per-segment gTop-k re-selection over the packed bucket, merged
+    into ONE ``(model_size, k_cap_total)`` wire block with bucket-global
+    indices.  Each segment's re-encode is exactly
+    :func:`encode_rows_topk` on its own column range — bit-identical to
+    the per-leaf merge — only the message is concatenated."""
+    vs, is_ = [], []
+    for s in layout.segments:
+        v, i = encode_rows_topk(
+            dense_bucket[:, s.row_off:s.row_off + s.d_row], s.k_cap,
+            codec_dtype)
+        vs.append(v)
+        is_.append(codec.offset_indices(i, s.row_off))
+    return jnp.concatenate(vs, axis=1), jnp.concatenate(is_, axis=1)
 
 
 def gtopk_round_plan(axis_sizes):
@@ -405,6 +391,34 @@ def gtopk_round_plan(axis_sizes):
     return plan
 
 
+def _gtopk_reduce_rounds(values, indices, axes, d_row: int, encode,
+                         dtype=jnp.float32):
+    """The recursive-doubling XOR-merge loop shared by both dispatch
+    granularities — ONE implementation of the subtlest invariant in the
+    wire (the drop/group crediting of DESIGN.md §7), parametrized only
+    by the re-encode step ``encode(dense) -> (values, indices)``."""
+    sizes = [compat.axis_size(a) for a in axes]
+    plan = gtopk_round_plan(sizes)
+    dense = _decode_rows(values, indices, d_row, dtype)
+    drop = jnp.zeros_like(dense)
+    for r, (pos, mask, group) in enumerate(plan):
+        if r == 0:
+            # the worker's own pair already IS the top-k_cap encoding of
+            # its partial (<= k_cap duplicate-free slots, values already
+            # wire-cast), so the round-0 re-encode would reproduce it
+            # with drop == 0 — send it as-is
+            v, i, sent = values, indices, dense
+        else:
+            v, i = encode(dense)
+            sent = _decode_rows(v, i, d_row, dtype)
+            drop = drop + (dense - sent) / group
+        perm = [(j, j ^ mask) for j in range(sizes[pos])]
+        rv = compat.ppermute(v, axes[pos], perm)
+        ri = compat.ppermute(i, axes[pos], perm)
+        dense = sent + _decode_rows(rv, ri, d_row, dtype)
+    return dense, drop
+
+
 def _gtopk_reduce(values, indices, axes, d_row: int, k_cap: int,
                   codec_dtype=None, dtype=jnp.float32):
     """Recursive-doubling pruned-sum of every worker's codec pairs.
@@ -421,26 +435,24 @@ def _gtopk_reduce(values, indices, axes, d_row: int, k_cap: int,
     merge, so summing ``drop`` over the world recovers the total dropped
     mass exactly (DESIGN.md §7).
     """
-    sizes = [compat.axis_size(a) for a in axes]
-    plan = gtopk_round_plan(sizes)
-    dense = _decode_rows(values, indices, d_row, dtype)
-    drop = jnp.zeros_like(dense)
-    for r, (pos, mask, group) in enumerate(plan):
-        if r == 0:
-            # the worker's own pair already IS the top-k_cap encoding of
-            # its partial (<= k_cap duplicate-free slots, values already
-            # wire-cast), so the round-0 re-encode would reproduce it
-            # with drop == 0 — send it as-is
-            v, i, sent = values, indices, dense
-        else:
-            v, i = encode_rows_topk(dense, k_cap, codec_dtype)
-            sent = _decode_rows(v, i, d_row, dtype)
-            drop = drop + (dense - sent) / group
-        perm = [(j, j ^ mask) for j in range(sizes[pos])]
-        rv = compat.ppermute(v, axes[pos], perm)
-        ri = compat.ppermute(i, axes[pos], perm)
-        dense = sent + _decode_rows(rv, ri, d_row, dtype)
-    return dense, drop
+    return _gtopk_reduce_rounds(
+        values, indices, axes, d_row,
+        lambda dense: encode_rows_topk(dense, k_cap, codec_dtype), dtype)
+
+
+def _gtopk_reduce_bucket(values, indices, axes, layout: BucketLayout,
+                         codec_dtype=None, dtype=jnp.float32):
+    """Bucketed recursive doubling: the SAME XOR-partner merge tree as
+    :func:`_gtopk_reduce`, but every round exchanges ONE merged
+    ``(model_size, k_cap_total)`` wire block — ``log2(W)`` ppermute
+    rounds per step TOTAL, not per leaf.  Re-selection stays per segment
+    (:func:`encode_bucket_topk`), and segment index ranges are disjoint,
+    so every decode/merge/drop is elementwise identical to the per-leaf
+    reducer."""
+    return _gtopk_reduce_rounds(
+        values, indices, axes, layout.d_row_total,
+        lambda dense: encode_bucket_topk(dense, layout, codec_dtype),
+        dtype)
 
 
 def gtopk_simulate(partials, k_cap: int, codec_dtype=None):
@@ -497,53 +509,12 @@ def _gather_mean(values, indices, axis, n: int, d_row: int, dtype):
     return jnp.sum(decoded, axis=0) / n
 
 
-def aggregate_compressed(grads, resid, spec: CompressorSpec, ratio: float,
-                         data_axes, model_axis: str, model_size: int, key, *,
-                         strategy: str = "allgather",
-                         hierarchical: bool = False, resid2=None,
-                         world: int = 1, codec_dtype=None,
-                         momentum_correction: float = 0.0,
-                         backend: str = "auto",
-                         density_policy=None, adapt_state=None, step=None):
-    """Eq. (2) sparse aggregation of a gradient pytree.
-
-    ``strategy`` picks the wire pattern (module docstring, DESIGN.md §3,
-    §7): ``"allgather"`` (flat, O(W) pairs), ``"hierarchical"``
-    (two-level pod -> global, needs ``resid2`` and >= 2 data axes — falls
-    back to flat otherwise), or ``"gtopk"`` (recursive doubling, O(log W)
-    pairs, needs power-of-two data-axis sizes).  ``hierarchical=True`` is
-    the legacy spelling of ``strategy="hierarchical"``.
-
-    Returns ``(agg, new_resid, new_resid2, new_adapt_state, metrics)``;
-    ``agg`` has the gradient's tree/shape/dtype, residual trees are
-    flat-padded like ``init_residuals``.  ``metrics`` are replicated
-    scalars: ``density`` (measured nnz fraction), ``comm_bits_sparse`` /
-    ``comm_bits_dense`` (per-worker wire volume, compile-time constants)
-    and ``wire_bytes``.
-
-    ``backend`` selects the per-worker compression pipeline
-    (``"auto"``/``"fused"``/``"reference"``, DESIGN.md §8) for every
-    wire strategy — it changes HBM passes, never wire or Eq.-2
-    semantics.
-
-    ``density_policy`` (a ``core.adaptk.DensityPolicy``) switches every
-    leaf to the adaptive-density path (DESIGN.md §9): pass A of the
-    fused pipeline runs first for every leaf, the per-leaf moments are
-    pmean'd over the data axes (one identical allocation on every
-    worker), and the global budget ``K_total(step)`` is redistributed
-    into per-leaf traced budgets by ``adaptk.allocate`` — budget-exact
-    under the policy's floor/ceiling clamps.  Codec capacities, staging
-    widths and the wire volume stay the compile-time constants derived
-    from the ceiling clamp.  ``adapt_state`` carries the EMA controller
-    state (lives in TrainState; ``None`` = stateless) and is returned
-    updated as ``new_adapt_state``; ``step`` feeds the DGC warmup
-    schedule.  Adaptive mode requires a ``DYNAMIC_COMPRESSORS`` member
-    and is mutually exclusive with ``momentum_correction``.
-    """
-    axes = tuple(data_axes)
-    mc = float(momentum_correction)
+def _wire_config(strategy: str, hierarchical: bool, axes, resid2, world: int,
+                 mc: float, adaptive: bool, spec: CompressorSpec):
+    """Resolve + validate the wire configuration (single source for both
+    dispatch granularities).  Returns ``(strategy, hier, gtopk,
+    outer_axis, inner_axes, n_pods, n_inner, world)``."""
     strategy = resolve_strategy(strategy, hierarchical)
-    adaptive = density_policy is not None
     if adaptive and mc > 0.0:
         raise ValueError("momentum_correction is fixed-k only (the DGC "
                          "velocity update needs the static-k path); "
@@ -576,8 +547,6 @@ def aggregate_compressed(grads, resid, spec: CompressorSpec, ratio: float,
         raise ValueError("momentum_correction needs a velocity state: "
                          "allocate resid2 via init_train_state(..., "
                          "strategy='hierarchical')")
-    use_v = mc > 0.0
-
     if hier:
         outer_axis, inner_axes = axes[0], axes[1:]
         n_pods = compat.axis_size(outer_axis)
@@ -585,8 +554,66 @@ def aggregate_compressed(grads, resid, spec: CompressorSpec, ratio: float,
     else:
         outer_axis, inner_axes = None, axes
         n_pods, n_inner = 1, world
+    return strategy, hier, gtopk, outer_axis, inner_axes, n_pods, n_inner, \
+        world
 
-    g_leaves, treedef = jax.tree.flatten(grads)
+
+def aggregate_compressed(grads, resid, spec: CompressorSpec, ratio: float,
+                         data_axes, model_axis: str, model_size: int, key, *,
+                         strategy: str = "allgather",
+                         hierarchical: bool = False, resid2=None,
+                         world: int = 1, codec_dtype=None,
+                         momentum_correction: float = 0.0,
+                         backend: str = "auto",
+                         density_policy=None, adapt_state=None, step=None):
+    """Eq. (2) sparse aggregation of a gradient pytree — per-leaf loop.
+
+    ``strategy`` picks the wire pattern (module docstring, DESIGN.md §3,
+    §7): ``"allgather"`` (flat, O(W) pairs), ``"hierarchical"``
+    (two-level pod -> global, needs ``resid2`` and >= 2 data axes — falls
+    back to flat otherwise), or ``"gtopk"`` (recursive doubling, O(log W)
+    pairs, needs power-of-two data-axis sizes).  ``hierarchical=True`` is
+    the legacy spelling of ``strategy="hierarchical"``.
+
+    Returns ``(agg, new_resid, new_resid2, new_adapt_state, metrics)``;
+    ``agg`` has the gradient's tree/shape/dtype, residual trees are
+    flat-padded like ``init_residuals``.  ``metrics`` are replicated
+    scalars: ``density`` (measured nnz fraction), ``comm_bits_sparse`` /
+    ``comm_bits_dense`` (per-worker wire volume, compile-time constants),
+    ``wire_bytes`` and ``collectives_per_step`` (the dispatch count this
+    granularity pays — L per wire level here; see
+    :func:`aggregate_bucketed` for the 1-per-level pipeline).
+
+    ``backend`` selects the per-worker compression pipeline
+    (``"auto"``/``"fused"``/``"reference"``, DESIGN.md §8) for every
+    wire strategy — it changes HBM passes, never wire or Eq.-2
+    semantics.
+
+    ``density_policy`` (a ``core.adaptk.DensityPolicy``) switches every
+    leaf to the adaptive-density path (DESIGN.md §9): pass A of the
+    fused pipeline runs first for every leaf, the per-leaf moments are
+    pmean'd over the data axes (one identical allocation on every
+    worker), and the global budget ``K_total(step)`` is redistributed
+    into per-leaf traced budgets by ``adaptk.allocate`` — budget-exact
+    under the policy's floor/ceiling clamps.  Codec capacities, staging
+    widths and the wire volume stay the compile-time constants derived
+    from the ceiling clamp.  ``adapt_state`` carries the EMA controller
+    state (lives in TrainState; ``None`` = stateless) and is returned
+    updated as ``new_adapt_state``; ``step`` feeds the DGC warmup
+    schedule.  Adaptive mode requires a ``DYNAMIC_COMPRESSORS`` member
+    and is mutually exclusive with ``momentum_correction``.
+    """
+    axes = tuple(data_axes)
+    mc = float(momentum_correction)
+    adaptive = density_policy is not None
+    strategy, hier, gtopk, outer_axis, inner_axes, n_pods, n_inner, world = \
+        _wire_config(strategy, hierarchical, axes, resid2, world, mc,
+                     adaptive, spec)
+    use_v = mc > 0.0
+
+    path_leaves, treedef = jax.tree_util.tree_flatten_with_path(grads)
+    g_leaves = [leaf for _, leaf in path_leaves]
+    salts = [leaf_key_salt(leaf_path_name(path)) for path, _ in path_leaves]
     e_leaves = treedef.flatten_up_to(resid)
     r2_leaves = (treedef.flatten_up_to(resid2) if resid2 is not None
                  else [None] * len(g_leaves))
@@ -619,17 +646,24 @@ def aggregate_compressed(grads, resid, spec: CompressorSpec, ratio: float,
         k_alloc, K_eff = adaptk.allocate(
             K, signal, [plans[li][2] for li in range(len(g_leaves))],
             [plans[li][3] for li in range(len(g_leaves))])
+    else:
+        for li, g in enumerate(g_leaves):
+            plans[li] = leaf_plan(g.size, model_size, ratio, spec)
 
+    # -- loop-invariant wire accounting, hoisted out of the leaf loop --
     val_bits = jnp.dtype(codec_dtype).itemsize * 8 if codec_dtype else 32
-    d_total = 0
+    d_total = sum(g.size for g in g_leaves)
+    cap_total = model_size * sum(plans[li][-1]
+                                 for li in range(len(g_leaves)))
+    levels = strategy_wire_pairs(strategy, world, n_pods)
+    bits_sparse = float(levels * cap_total * (val_bits + 32))
+    bits_dense = float(sum(2 * g.size * jnp.dtype(g.dtype).itemsize * 8
+                           for g in g_leaves))
     nnz_local = jnp.zeros((), jnp.float32)
-    cap_total = 0
-    bits_sparse = 0.0
-    bits_dense = 0.0
 
     agg_leaves, new_e_leaves, new_r2_leaves = [], [], []
     for li, (g, e, r2) in enumerate(zip(g_leaves, e_leaves, r2_leaves)):
-        lkey = jax.random.fold_in(key, li)
+        lkey = jax.random.fold_in(key, salts[li])
         d = g.size
         if adaptive:
             d_pad, d_row, _, _, k_cap = plans[li]
@@ -639,8 +673,7 @@ def aggregate_compressed(grads, resid, spec: CompressorSpec, ratio: float,
                 row_stats=leaf_row_stats[li])
             new_v = None
         else:
-            d_pad, d_row, k_row, k_cap = leaf_plan(d, model_size, ratio,
-                                                   spec)
+            d_pad, d_row, k_row, k_cap = plans[li]
             values, indices, new_e, new_v = compress_worker(
                 g, e, spec, ratio, model_size, lkey,
                 codec_dtype=codec_dtype,
@@ -696,19 +729,14 @@ def aggregate_compressed(grads, resid, spec: CompressorSpec, ratio: float,
         new_e_leaves.append(new_e)
         new_r2_leaves.append(new_r2)
 
-        pair_bits = model_size * k_cap * (val_bits + 32)
-        levels = strategy_wire_pairs(strategy, world, n_pods)
-        bits_sparse += float(levels * pair_bits)
-        bits_dense += float(2 * d * jnp.dtype(g.dtype).itemsize * 8)
-        d_total += d
-        cap_total += model_size * k_cap
-
     metrics = {
         "density": jax.lax.pmean(nnz_local / d_total, axes),
         "density_cap": jnp.float32(cap_total / d_total),
         "comm_bits_sparse": jnp.float32(bits_sparse),
         "comm_bits_dense": jnp.float32(bits_dense),
         "wire_bytes": jnp.float32(bits_sparse / 8.0),
+        "collectives_per_step": jnp.float32(collective_count(
+            strategy, world, n_pods, leaves=len(g_leaves))),
     }
     if adaptive:
         # identical on every worker: the allocation ran on the pmean'd
@@ -721,3 +749,222 @@ def aggregate_compressed(grads, resid, spec: CompressorSpec, ratio: float,
                   if resid2 is not None else None)
     return (treedef.unflatten(agg_leaves), new_resid, new_resid2,
             new_adapt, metrics)
+
+
+# ---------------------------------------------------------------------------
+# bucketed aggregation: one wire message per step (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+
+def bucket_compress(G: jax.Array, E: jax.Array, layout: BucketLayout,
+                    spec: CompressorSpec, key, *, codec_dtype=None,
+                    momentum: float = 0.0, V=None, backend: str = "auto",
+                    k_alloc=None, seg_stats=None, key_fold=None):
+    """Worker-local EF compression of the packed bucket — pure
+    (unit-testable without a mesh).
+
+    ``G``/``E`` (and ``V`` under momentum correction) are
+    ``(model_size, d_row_total)`` buckets; returns ``(values, indices,
+    new_E, new_V)`` where ``values``/``indices`` are ONE concatenated
+    ``(model_size, k_cap_total)`` codec pair with bucket-global indices
+    and ``new_E`` the residual bucket.  Selection runs per leaf segment
+    with the segment's own static plan and the stable per-segment RNG
+    salt fold — bit-identical to :func:`compress_worker` /
+    :func:`compress_worker_dynamic` on the same leaf values.
+
+    ``k_alloc`` switches to the adaptive dynamic-k path (traced
+    per-segment element budgets, ``seg_stats`` the per-segment pass-A
+    row stats); ``key_fold`` appends an extra ``fold_in`` after the salt
+    (the hierarchical second level folds 1, matching the per-leaf path).
+    """
+    segs = layout.segments
+    fused = momentum == 0.0 and resolve_backend(backend, spec)
+    adaptive = k_alloc is not None
+    vals, idcs, new_e_blocks, new_v_blocks = [], [], [], []
+
+    def seg_key(s):
+        if key is None:
+            return None
+        lkey = jax.random.fold_in(key, s.salt)
+        return lkey if key_fold is None else jax.random.fold_in(lkey,
+                                                                key_fold)
+
+    if fused:
+        M = layout.model_size
+        ranges = [(s.row_off, s.d_row) for s in segs]
+        if adaptive:
+            ks = [jnp.clip((k_alloc[si] + M - 1) // M, 1, s.d_row)
+                  for si, s in enumerate(segs)]
+        else:
+            ks = [s.k_row for s in segs]
+        triples = segmented_compress_ef(G, E, ranges, spec.name, ks,
+                                        [s.k_cap for s in segs],
+                                        stats=seg_stats)
+        for s, (v, i, ne) in zip(segs, triples):
+            v, i, ne = _wire_cast_fixup(v, i, ne, codec_dtype)
+            vals.append(v)
+            idcs.append(codec.offset_indices(i, s.row_off))
+            new_e_blocks.append(ne)
+    else:
+        for si, s in enumerate(segs):
+            a, b = s.row_off, s.row_off + s.d_row
+            if adaptive:
+                v, i, ne = _compress_rows_dynamic(
+                    G[:, a:b], E[:, a:b], spec, k_alloc[si], s.k_cap,
+                    seg_key(s), codec_dtype=codec_dtype, backend=backend,
+                    row_stats=None if seg_stats is None else seg_stats[si])
+                nv = None
+            else:
+                v, i, ne, nv = _compress_rows(
+                    G[:, a:b], E[:, a:b], spec, s.k_row, s.k_cap,
+                    seg_key(s), codec_dtype=codec_dtype, momentum=momentum,
+                    v_rows=V[:, a:b] if momentum > 0.0 else None,
+                    backend=backend)
+            vals.append(v)
+            idcs.append(codec.offset_indices(i, s.row_off))
+            new_e_blocks.append(ne)
+            if nv is not None:
+                new_v_blocks.append(nv)
+
+    values = jnp.concatenate(vals, axis=1)
+    indices = jnp.concatenate(idcs, axis=1)
+    new_E = jnp.concatenate([blk.astype(E.dtype) for blk in new_e_blocks],
+                            axis=1)
+    new_V = (jnp.concatenate([blk.astype(E.dtype) for blk in new_v_blocks],
+                             axis=1) if new_v_blocks else None)
+    return values, indices, new_E, new_V
+
+
+def aggregate_bucketed(grads, resid, layout: BucketLayout,
+                       spec: CompressorSpec, data_axes, model_axis: str,
+                       key, *, strategy: str = "allgather",
+                       hierarchical: bool = False, resid2=None,
+                       world: int = 1, codec_dtype=None,
+                       momentum_correction: float = 0.0,
+                       backend: str = "auto", density_policy=None,
+                       adapt_state=None, step=None):
+    """Eq. (2) sparse aggregation over the flat bucketed pipeline.
+
+    Same semantics and return contract as :func:`aggregate_compressed`
+    (bit-identical results — asserted by tests/_dist_check.py
+    ``bucketed``), except the residuals are flat buckets
+    (``(model_size * d_row_total,)``, see ``dist/layout.py``) and every
+    wire level is exactly ONE collective per step regardless of leaf
+    count:
+
+      allgather      1 sparse all-gather     (per-leaf: L)
+      hierarchical   1 per pod level = 2     (per-leaf: 2·L)
+      gtopk          log2(W) ppermute rounds (per-leaf: L·log2(W))
+
+    ``ratio``/``model_size`` come from the layout (which must have been
+    built for this ``spec`` and density mode — validated loudly).
+    Returns ``(agg, new_resid, new_resid2, new_adapt_state, metrics)``
+    with flat-bucket residuals.
+    """
+    axes = tuple(data_axes)
+    mc = float(momentum_correction)
+    adaptive = density_policy is not None
+    if layout.spec_name != spec.name:
+        raise ValueError(f"layout was built for compressor "
+                         f"{layout.spec_name!r}, got {spec.name!r}")
+    if layout.adaptive != adaptive:
+        raise ValueError(
+            f"layout adaptive={layout.adaptive} does not match "
+            f"density_policy={'set' if adaptive else 'None'}; rebuild the "
+            "layout with the matching density_policy")
+    strategy, hier, gtopk, outer_axis, inner_axes, n_pods, n_inner, world = \
+        _wire_config(strategy, hierarchical, axes, resid2, world, mc,
+                     adaptive, spec)
+
+    M, D = layout.model_size, layout.d_row_total
+    G = pack_grads(layout, grads, resid.dtype)
+    E = resid.reshape(M, D)
+    R2 = resid2.reshape(M, D) if resid2 is not None else None
+
+    # -- adaptive phase 1: segmented pass-A -> pmean'd signal -> allocation
+    new_adapt = adapt_state
+    k_alloc = K_eff = None
+    seg_stats = None
+    if adaptive:
+        fusedp = resolve_backend(backend, spec)
+        sigs = []
+        if fusedp:
+            seg_stats = segmented_pass_a(
+                G, E, [(s.row_off, s.d_row) for s in layout.segments],
+                spec.name)
+            for s, rs in zip(layout.segments, seg_stats):
+                sm, sq, mx = _stats_reduce(rs)
+                sigs.append(adaptk.leaf_signal(density_policy.policy,
+                                               s.size, sm, sq, mx))
+        else:
+            for s in layout.segments:
+                a, b = s.row_off, s.row_off + s.d_row
+                _, (sm, sq, mx) = pass_a_stats_rows(
+                    G[:, a:b], E[:, a:b], spec.name, False)
+                sigs.append(adaptk.leaf_signal(density_policy.policy,
+                                               s.size, sm, sq, mx))
+        signal = jax.lax.pmean(jnp.stack(sigs), axes)
+        signal, new_adapt = adaptk.blend_signal(adapt_state, signal,
+                                                density_policy.ema)
+        K = adaptk.budget([s.size for s in layout.segments], layout.ratio,
+                          density_policy, step)
+        k_alloc, K_eff = adaptk.allocate(
+            K, signal, [s.k_lo for s in layout.segments],
+            [s.k_hi for s in layout.segments])
+
+    # -- worker-local compression: ONE wire block --
+    values, indices, new_E, new_V = bucket_compress(
+        G, E, layout, spec, key, codec_dtype=codec_dtype, momentum=mc,
+        V=R2 if mc > 0.0 else None, backend=backend, k_alloc=k_alloc,
+        seg_stats=seg_stats)
+    nnz_local = codec.nnz(indices).astype(jnp.float32)
+
+    # -- the wire: one collective per level --
+    if gtopk:
+        dense_sum, merge_drop = _gtopk_reduce_bucket(
+            values, indices, axes, layout, codec_dtype)
+        mean = dense_sum / world
+        new_E = new_E + merge_drop.astype(new_E.dtype)
+    else:
+        mean = _gather_mean(values, indices, inner_axes, n_inner, D,
+                            jnp.float32)
+
+    if hier:
+        # second level: compress the pod-mean bucket against resid2 and
+        # average across pods — one more all-gather, not one per leaf
+        g2 = mean.astype(R2.dtype) if adaptive else mean
+        v2, i2, new_R2, _ = bucket_compress(
+            g2, R2, layout, spec, key, codec_dtype=codec_dtype,
+            backend=backend, k_alloc=k_alloc, key_fold=1)
+        mean = _gather_mean(v2, i2, outer_axis, n_pods, D, jnp.float32)
+        nnz_local += codec.nnz(i2).astype(jnp.float32)
+    elif mc > 0.0:
+        new_R2 = new_V
+    else:
+        new_R2 = R2
+
+    agg = unpack_tree(layout, mean, like=grads)
+    # the dense baseline is sized from the RUNTIME gradient dtypes (not
+    # the dtypes frozen into the layout at build time), matching the
+    # per-leaf path under mixed-precision grads
+    bits_dense = float(sum(2 * g.size * jnp.dtype(g.dtype).itemsize * 8
+                           for g in jax.tree.leaves(grads)))
+    metrics = {
+        "density": jax.lax.pmean(nnz_local / layout.d_total, axes),
+        "density_cap": jnp.float32(
+            M * layout.k_cap_total / layout.d_total),
+        "comm_bits_sparse": jnp.float32(
+            layout.comm_bits_sparse(strategy, world, n_pods, codec_dtype)),
+        "comm_bits_dense": jnp.float32(bits_dense),
+        "wire_bytes": jnp.float32(
+            layout.comm_bits_sparse(strategy, world, n_pods,
+                                    codec_dtype) / 8.0),
+        "collectives_per_step": jnp.float32(
+            layout.collectives(strategy, world, n_pods)),
+    }
+    if adaptive:
+        metrics["k_total"] = K_eff.astype(jnp.float32)
+        metrics["density_budget"] = (K_eff.astype(jnp.float32)
+                                     / layout.d_total)
+    new_resid2 = new_R2.reshape(-1) if resid2 is not None else None
+    return agg, new_E.reshape(-1), new_resid2, new_adapt, metrics

@@ -73,6 +73,30 @@ def param_specs(params, model_axis: str, model_size: int):
         params)
 
 
+def train_state_specs(state, joint):
+    """PartitionSpec tree for a TrainState entering the shard_map region.
+
+    Residual state — whether the legacy per-leaf trees or the flat
+    bucketed buffers of ``dist/layout.py`` (both are ``(workers, ...)``
+    with a leading worker axis) — shards that worker axis over the joint
+    data axes; params, optimizer state, step counter and the adaptk
+    controller are replicated (every worker computes the identical
+    update).  ``joint`` is one data-axis name or the tuple of them.
+    """
+    def of(path, leaf):
+        top = str(getattr(path[0], "key", ""))
+        if top in ("resid", "resid2"):
+            return P(joint)
+        return P()
+    return jax.tree_util.tree_map_with_path(of, state)
+
+
+def batch_specs(batch, joint):
+    """Every batch leaf shards its leading (batch) dim over the joint
+    data axes — one micro-batch per data-parallel worker."""
+    return jax.tree.map(lambda _: P(joint), batch)
+
+
 def cache_specs(cache, data_axes, data_size: int, model_axis: str,
                 model_size: int):
     """Serve-time KV/SSM/recurrent cache layouts.

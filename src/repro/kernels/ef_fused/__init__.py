@@ -17,7 +17,12 @@ from repro.kernels.ef_fused.ops import (FUSED_COMPRESSORS, choose_block,
                                         fused_pass_a, supports_fused,
                                         unfused_compress_ef)
 from repro.kernels.ef_fused.passes import count_passes
+from repro.kernels.ef_fused.segmented import (rows_compress_ef, rows_pass_a,
+                                              segmented_compress_ef,
+                                              segmented_pass_a)
 
 __all__ = ["FUSED_COMPRESSORS", "choose_block", "choose_stats_block",
            "fused_compress_ef", "fused_pass_a", "supports_fused",
-           "unfused_compress_ef", "count_passes"]
+           "unfused_compress_ef", "count_passes",
+           "rows_compress_ef", "rows_pass_a", "segmented_compress_ef",
+           "segmented_pass_a"]

@@ -315,3 +315,56 @@ def analyze(hlo: str) -> Dict[str, float]:
     coll["total"] = sum(coll.values())
     return {"flops": root["flops"], "bytes": root["bytes"],
             "collectives": coll}
+
+
+# ---------------------------------------------------------------------------
+# jaxpr-level collective counting (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+
+def count_jaxpr_primitives(jaxpr, names) -> Dict[str, int]:
+    """Count primitive occurrences in a (closed) jaxpr, recursing into
+    every sub-jaxpr (shard_map bodies, pjit/closed_call, scan, cond, ...).
+
+    The bucketed-aggregation acceptance check rides on this: tracing the
+    shard_mapped step and counting ``all_gather`` / ``ppermute`` eqns
+    proves the wire issues exactly one codec-pair collective per level
+    per step (two array collectives — values + indices — per pair; one
+    pair per gTop-k round), independent of leaf count.  Works on
+    AbstractMesh traces, so no devices are needed.
+    """
+    core_jaxpr = getattr(jaxpr, "jaxpr", jaxpr)
+    counts = {n: 0 for n in names}
+
+    def walk(jx):
+        for eqn in jx.eqns:
+            if eqn.primitive.name in counts:
+                counts[eqn.primitive.name] += 1
+            for v in eqn.params.values():
+                for sub in _sub_jaxprs(v):
+                    walk(sub)
+    walk(core_jaxpr)
+    return counts
+
+
+def _sub_jaxprs(value):
+    """Yield every jaxpr nested inside an eqn param value."""
+    vals = value if isinstance(value, (tuple, list)) else (value,)
+    for v in vals:
+        inner = getattr(v, "jaxpr", None)
+        if inner is not None and hasattr(inner, "eqns"):
+            yield inner          # ClosedJaxpr
+        elif hasattr(v, "eqns"):
+            yield v              # raw Jaxpr
+
+
+def count_wire_collectives(jaxpr) -> Dict[str, int]:
+    """``{all_gather, ppermute, messages}`` of a traced aggregation step.
+
+    ``messages`` is the logical codec-pair collective count: the values
+    and indices arrays of one pair travel as two array collectives, so
+    ``messages = (all_gather + ppermute) / 2``.
+    """
+    c = count_jaxpr_primitives(jaxpr, ("all_gather", "ppermute"))
+    c["messages"] = (c["all_gather"] + c["ppermute"]) // 2
+    return c

@@ -39,6 +39,14 @@ def parse_args(argv=None):
                     help="compression pipeline: fused single-pass Pallas "
                          "kernels (DESIGN.md §8) when the compressor "
                          "supports them, or the jnp reference")
+    ap.add_argument("--pipeline", default="bucketed",
+                    choices=["bucketed", "perleaf"],
+                    help="aggregation dispatch (DESIGN.md §10): the flat "
+                         "bucketed pipeline (one wire collective per "
+                         "level per step; residuals stored as one flat "
+                         "buffer) or the legacy per-leaf loop (one "
+                         "collective chain per gradient leaf) — results "
+                         "are bit-identical")
     ap.add_argument("--density-policy", default="",
                     choices=["", "none", "uniform", "variance", "absmax"],
                     help="adaptive layer-wise density (DESIGN.md §9): "
@@ -130,22 +138,35 @@ def main(argv=None):
             warmup_mult=args.density_warmup_mult if args.density_warmup
             else 1.0)
     params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    layout = None
+    if args.pipeline == "bucketed" and args.compressor != "none":
+        from repro.core.compressors import get_compressor
+        from repro.dist.layout import build_layout
+
+        # computed ONCE from the param pytree: the static bucket geometry
+        # behind the one-collective-per-level wire (DESIGN.md §10)
+        layout = build_layout(params, model_axis_size(mesh), args.ratio,
+                              get_compressor(args.compressor),
+                              density_policy=policy)
     state = init_train_state(
         params, opt, workers=data_world_size(mesh),
         model_size=model_axis_size(mesh),
         with_residual=args.compressor not in ("none",),
-        strategy=strategy, density_policy=policy)
+        strategy=strategy, density_policy=policy, layout=layout)
     if args.resume:
-        state = load_state(args.resume, state)
+        # layout enables the per-leaf -> flat-bucket residual migration
+        # shim for checkpoints written before the bucketed pipeline
+        state = load_state(args.resume, state, layout=layout)
 
     step = make_train_step(cfg, mesh, opt, lr_fn,
                            compressor=args.compressor, ratio=args.ratio,
                            strategy=strategy, backend=args.backend,
                            remat=not args.smoke, seed=args.seed,
-                           density_policy=policy)
+                           density_policy=policy, layout=layout)
 
     print(f"arch={cfg.name} compressor={args.compressor} ratio={args.ratio} "
           f"strategy={strategy} backend={args.backend} mesh={args.mesh} "
+          f"pipeline={args.pipeline} "
           f"density_policy={pol_name or 'fixed-k'} steps={args.steps}")
     t0 = time.time()
     for i in range(args.steps):
@@ -157,6 +178,8 @@ def main(argv=None):
             if "comm_bits_sparse" in m:
                 r = float(m["comm_bits_sparse"]) / float(m["comm_bits_dense"])
                 comm = f" comm_frac={r:.4f}"
+            if "collectives_per_step" in m:
+                comm += f" coll={int(m['collectives_per_step'])}"
             if "k_total" in m:
                 comm += f" k_total={int(m['k_total'])}"
             print(f"step {i:5d} loss={float(m['loss']):.4f} "

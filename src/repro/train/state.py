@@ -1,16 +1,26 @@
 """Train state: params + optimizer state + per-worker error-feedback
 residuals (paper Eq. 2 requires one residual vector per data-parallel
-worker; they live flat-padded with a leading worker axis, sharded
-(workers -> data axes, flat dim -> model))."""
+worker).  Two storage layouts (DESIGN.md §10):
+
+* per-leaf (legacy / oracle path): one flat-padded vector per gradient
+  leaf, tree-structured, with a leading worker axis;
+* flat bucketed (pass ``layout=``): ONE ``(workers, model_size *
+  d_row_total)`` buffer per residual level, packed by the static
+  ``dist/layout.BucketLayout`` — the storage the single-collective
+  aggregation path (``aggregate_bucketed``) reads and writes.
+
+Both shard workers -> data axes (see ``dist/sharding.train_state_specs``).
+"""
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import adaptk
 from repro.dist.aggregate import init_residuals, resolve_strategy
+from repro.dist.layout import BucketLayout, init_flat_residual
 from repro.optim import Optimizer
 
 
@@ -18,12 +28,20 @@ def init_train_state(params, optimizer: Optimizer, *, workers: int,
                      model_size: int, with_residual: bool = True,
                      hierarchical: bool = False, strategy: str = "allgather",
                      resid_dtype=jnp.float32,
-                     density_policy=None) -> Dict[str, Any]:
+                     density_policy=None,
+                     layout: Optional[BucketLayout] = None) -> Dict[str, Any]:
     """``strategy="hierarchical"`` (or the legacy ``hierarchical=True``)
     allocates the second residual ``resid2`` the two-level path
     compresses the pod-mean against; ``"allgather"`` and ``"gtopk"``
     need only the per-worker ``resid`` (the gTop-k merge drops are
     credited into it directly — dist/aggregate.py).
+
+    ``layout`` (a ``dist/layout.BucketLayout``) switches residual
+    storage to the flat bucketed buffers the single-collective
+    aggregation path uses — one ``(workers, model_size * d_row_total)``
+    array per level instead of a per-leaf tree.  Legacy per-leaf
+    checkpoints load into it through the ``checkpoint/npz.py`` migration
+    shim.
 
     ``density_policy`` additionally allocates the adaptive-density
     controller state ``adaptk`` (the EMA'd per-leaf allocation signal,
@@ -35,12 +53,23 @@ def init_train_state(params, optimizer: Optimizer, *, workers: int,
         "step": jnp.zeros((), jnp.int32),
     }
     if with_residual:
-        one = init_residuals(params, model_size, resid_dtype)
-        state["resid"] = jax.tree.map(
-            lambda e: jnp.zeros((workers,) + e.shape, e.dtype), one)
+        if layout is not None:
+            if layout.model_size != model_size:
+                raise ValueError(
+                    f"layout was built for model_size={layout.model_size}, "
+                    f"init_train_state got {model_size}")
+            if len(layout.segments) != len(jax.tree.leaves(params)):
+                raise ValueError(
+                    f"layout has {len(layout.segments)} segments for a "
+                    f"{len(jax.tree.leaves(params))}-leaf param tree; "
+                    "rebuild it from these params")
+            one = init_flat_residual(layout, resid_dtype)
+        else:
+            one = init_residuals(params, model_size, resid_dtype)
+        stackw = lambda e: jnp.zeros((workers,) + e.shape, e.dtype)  # noqa: E731
+        state["resid"] = jax.tree.map(stackw, one)
         if resolve_strategy(strategy, hierarchical) == "hierarchical":
-            state["resid2"] = jax.tree.map(
-                lambda e: jnp.zeros((workers,) + e.shape, e.dtype), one)
+            state["resid2"] = jax.tree.map(stackw, one)
         if density_policy is not None:
             state["adaptk"] = adaptk.init_controller_state(
                 len(jax.tree.leaves(params)))

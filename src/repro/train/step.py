@@ -25,7 +25,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.compressors import get_compressor
 from repro.dist import aggregate, compat
-from repro.dist.sharding import param_spec
+from repro.dist.sharding import batch_specs, param_spec, train_state_specs
 from repro.launch.mesh import data_axes_of, data_world_size, model_axis_size
 from repro.models import loss_fn as model_loss_fn
 from repro.optim import Optimizer
@@ -64,7 +64,8 @@ def make_train_step(cfg, mesh, optimizer: Optimizer, lr_fn: Callable,
                     remat: bool = True, seed: int = 0,
                     loss_fn: Optional[Callable] = None, codec_dtype=None,
                     momentum_correction: float = 0.0,
-                    backend: str = "auto", density_policy=None):
+                    backend: str = "auto", density_policy=None,
+                    layout=None):
     """Returns (step_fn, in_specs, out_specs).  ``step_fn(state, batch) ->
     (state, metrics)`` is already jit+shard_map wrapped for ``mesh``.
     ``compressor=None``/"none" gives the Dense-SGD baseline.
@@ -72,6 +73,14 @@ def make_train_step(cfg, mesh, optimizer: Optimizer, lr_fn: Callable,
     ``strategy`` selects the sparse wire pattern — ``"allgather"``,
     ``"gtopk"`` or ``"hierarchical"`` (see dist/aggregate.py; the legacy
     ``hierarchical=True`` flag maps to ``strategy="hierarchical"``).
+
+    ``layout`` (a ``dist/layout.BucketLayout`` built from the SAME
+    params/ratio/compressor/density-policy configuration) dispatches the
+    aggregation through the flat bucketed pipeline
+    (``aggregate_bucketed``, DESIGN.md §10): the state's residuals are
+    the flat buffers of ``init_train_state(..., layout=...)`` and every
+    wire level is one collective per step instead of one per leaf.
+    ``layout=None`` keeps the per-leaf loop (bit-identical results).
 
     ``backend`` selects the per-worker compression pipeline:
     ``"auto"`` (fused Pallas path for compressors that support it,
@@ -92,6 +101,19 @@ def make_train_step(cfg, mesh, optimizer: Optimizer, lr_fn: Callable,
         raise ValueError("density_policy steers the sparse budget; it has "
                          "no meaning for the Dense-SGD baseline")
     spec = None if dense else get_compressor(compressor)
+    if layout is not None and not dense:
+        # fail at factory time, not deep inside the traced step
+        if layout.model_size != msize:
+            raise ValueError(f"layout model_size={layout.model_size} != "
+                             f"mesh model axis {msize}")
+        if layout.spec_name != spec.name:
+            raise ValueError(f"layout compressor {layout.spec_name!r} != "
+                             f"{spec.name!r}")
+        if abs(layout.ratio - float(ratio)) > 1e-12:
+            raise ValueError(f"layout ratio {layout.ratio} != {ratio}")
+        if layout.adaptive != (density_policy is not None):
+            raise ValueError("layout density mode does not match "
+                             "density_policy; rebuild the layout")
     base_key = jax.random.PRNGKey(seed)
     constrain = lambda tree: constrain_params(tree, "model", msize)  # noqa: E731
     loss = loss_fn or (lambda p, b: model_loss_fn(p, cfg, b, remat=remat,
@@ -122,14 +144,25 @@ def make_train_step(cfg, mesh, optimizer: Optimizer, lr_fn: Callable,
                       if "resid2" in state else None)
             key = jax.random.fold_in(base_key, state["step"])
             key = jax.random.fold_in(key, worker_index(data_axes))
-            agg, nr, nr2, new_adapt, agg_metrics = \
-                aggregate.aggregate_compressed(
-                    grads, resid, spec, ratio, data_axes, "model", msize,
-                    key, strategy=strategy, resid2=resid2,
-                    world=data_world_size(mesh), codec_dtype=codec_dtype,
-                    momentum_correction=momentum_correction,
-                    backend=backend, density_policy=density_policy,
-                    adapt_state=state.get("adaptk"), step=state["step"])
+            # one kwargs set for both dispatch granularities — they
+            # differ only in the positional head (layout vs ratio/msize)
+            agg_kw = dict(strategy=strategy, resid2=resid2,
+                          world=data_world_size(mesh),
+                          codec_dtype=codec_dtype,
+                          momentum_correction=momentum_correction,
+                          backend=backend, density_policy=density_policy,
+                          adapt_state=state.get("adaptk"),
+                          step=state["step"])
+            if layout is not None:
+                agg, nr, nr2, new_adapt, agg_metrics = \
+                    aggregate.aggregate_bucketed(
+                        grads, resid, layout, spec, data_axes, "model",
+                        key, **agg_kw)
+            else:
+                agg, nr, nr2, new_adapt, agg_metrics = \
+                    aggregate.aggregate_compressed(
+                        grads, resid, spec, ratio, data_axes, "model",
+                        msize, key, **agg_kw)
             new_resid = jax.tree.map(lambda e: e[None], nr)
             new_resid2 = (jax.tree.map(lambda e: e[None], nr2)
                           if "resid2" in state else None)
@@ -152,23 +185,13 @@ def make_train_step(cfg, mesh, optimizer: Optimizer, lr_fn: Callable,
         metrics.update(agg_metrics)
         return new_state, metrics
 
-    def state_specs(state):
-        def of(path, leaf):
-            top = str(getattr(path[0], "key", ""))
-            if top in ("resid", "resid2"):
-                return P(joint)
-            return P()
-        return jax.tree_util.tree_map_with_path(of, state)
-
-    def batch_specs(batch):
-        return jax.tree.map(lambda _: P(joint), batch)
-
     @jax.jit
     def step_fn(state, batch):
         sm = compat.shard_map(
             per_worker_step, mesh=mesh,
-            in_specs=(state_specs(state), batch_specs(batch)),
-            out_specs=(state_specs(state), P()),
+            in_specs=(train_state_specs(state, joint),
+                      batch_specs(batch, joint)),
+            out_specs=(train_state_specs(state, joint), P()),
             axis_names=set(data_axes), check_vma=False)
         return sm(state, batch)
 

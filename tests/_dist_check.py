@@ -369,6 +369,158 @@ def check_adaptk():
     print("ADAPTK OK")
 
 
+def check_bucketed():
+    """Bucketed aggregation (ISSUE 5) == per-leaf aggregation BIT-exactly
+    on real meshes, for all three wire strategies, fixed-k and adaptive,
+    reference and fused backends — plus the jaxpr collective-count
+    assertion on the same traced programs: one codec-pair collective per
+    wire level per step (log2(W) ppermute rounds for gTop-k),
+    independent of leaf count."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.adaptk import make_policy
+    from repro.dist import aggregate, compat
+    from repro.dist.layout import build_layout, pack_residual_arrays
+    from repro.launch.hlo_cost import count_wire_collectives
+
+    params = {"a": jnp.zeros((33, 5)), "n": {"b": jnp.zeros((7,)),
+                                             "c": jnp.zeros((19, 3))}}
+    L = len(jax.tree.leaves(params))
+    ratio = 0.05
+
+    def run_case(shape, axes_names, strategy, *, policy=None,
+                 with_r2=False, backend="reference", comp="topk",
+                 momentum=0.0, expect=None):
+        mesh = make_mesh(shape, axes_names)
+        msize = model_axis_size(mesh)
+        W = data_world_size(mesh)
+        data_axes = tuple(a for a in axes_names if a != "model")
+        joint = data_axes if len(data_axes) > 1 else data_axes[0]
+        spec = get_compressor(comp)
+        layout = build_layout(params, msize, ratio, spec,
+                              density_policy=policy)
+
+        key = jax.random.PRNGKey(1)
+        g_stack = jax.tree.map(
+            lambda p: 0.01 * jax.random.normal(
+                jax.random.fold_in(key, p.size), (W,) + p.shape), params)
+        e_tree = jax.tree.map(
+            lambda p: 1e-3 * jax.random.normal(
+                jax.random.fold_in(key, p.size + 1),
+                (W, -(-p.size // msize) * msize)), params)
+        e_flat = jnp.asarray(pack_residual_arrays(
+            layout, [np.asarray(x) for x in jax.tree.leaves(e_tree)]))
+        r2_tree = (jax.tree.map(lambda e: 0.5 * e, e_tree)
+                   if with_r2 else None)
+        r2_flat = (jnp.asarray(pack_residual_arrays(
+            layout, [np.asarray(x) for x in jax.tree.leaves(r2_tree)]))
+            if with_r2 else None)
+        kw = dict(strategy=strategy, world=W, backend=backend,
+                  momentum_correction=momentum, density_policy=policy,
+                  step=jnp.int32(0) if policy else None)
+
+        def per_leaf(g, e, *r2s):
+            r2 = jax.tree.map(lambda x: x[0], r2s[0]) if r2s else None
+            agg, ne, nr2, _, m = aggregate.aggregate_compressed(
+                jax.tree.map(lambda x: x[0], g),
+                jax.tree.map(lambda x: x[0], e), spec, ratio, data_axes,
+                "model", msize, jax.random.PRNGKey(7), resid2=r2, **kw)
+            out = (agg, jax.tree.map(lambda x: x[None], ne), m)
+            return out + ((jax.tree.map(lambda x: x[None], nr2),)
+                          if r2s else ())
+
+        def bucketed(g, e, *r2s):
+            agg, ne, nr2, _, m = aggregate.aggregate_bucketed(
+                jax.tree.map(lambda x: x[0], g), e[0], layout, spec,
+                data_axes, "model", jax.random.PRNGKey(7),
+                resid2=r2s[0][0] if r2s else None, **kw)
+            out = (agg, ne[None], m)
+            return out + ((nr2[None],) if r2s else ())
+
+        sm1 = compat.shard_map(
+            per_leaf, mesh=mesh, in_specs=(P(joint),) * (2 + with_r2),
+            out_specs=(P(), P(joint), P()) + ((P(joint),) if with_r2
+                                              else ()),
+            axis_names=set(data_axes), check_vma=False)
+        sm2 = compat.shard_map(
+            bucketed, mesh=mesh, in_specs=(P(joint),) * (2 + with_r2),
+            out_specs=(P(), P(joint), P()) + ((P(joint),) if with_r2
+                                              else ()),
+            axis_names=set(data_axes), check_vma=False)
+        args1 = (g_stack, e_tree) + ((r2_tree,) if with_r2 else ())
+        args2 = (g_stack, e_flat) + ((r2_flat,) if with_r2 else ())
+        out1 = jax.jit(sm1)(*args1)
+        out2 = jax.jit(sm2)(*args2)
+
+        # bit-exact agreement: aggregate, residuals (both levels), metrics
+        for pa, pb in zip(jax.tree.leaves(out1[0]),
+                          jax.tree.leaves(out2[0])):
+            assert np.array_equal(np.asarray(pa), np.asarray(pb)), \
+                (shape, strategy, "agg")
+        e1 = pack_residual_arrays(layout, [
+            np.asarray(x) for x in jax.tree.leaves(out1[1])])
+        assert np.array_equal(e1, np.asarray(out2[1])), \
+            (shape, strategy, "resid")
+        if with_r2:
+            r21 = pack_residual_arrays(layout, [
+                np.asarray(x) for x in jax.tree.leaves(out1[3])])
+            assert np.array_equal(r21, np.asarray(out2[3])), \
+                (shape, strategy, "resid2")
+        for mk in ("density", "density_cap", "comm_bits_sparse",
+                   "comm_bits_dense", "wire_bytes"):
+            assert float(out1[2][mk]) == float(out2[2][mk]), \
+                (shape, strategy, mk)
+        if policy is not None:
+            assert float(out1[2]["k_total"]) == float(out2[2]["k_total"])
+
+        # collective counts from the traced jaxprs: bucketed is
+        # leaf-count independent, per-leaf scales with L
+        c1 = count_wire_collectives(jax.make_jaxpr(sm1)(*args1))
+        c2 = count_wire_collectives(jax.make_jaxpr(sm2)(*args2))
+        if expect is not None:
+            want_ag, want_pp = expect
+            assert (c2["all_gather"], c2["ppermute"]) == \
+                (want_ag, want_pp), (shape, strategy, c2)
+            assert (c1["all_gather"], c1["ppermute"]) == \
+                (want_ag * L, want_pp * L), (shape, strategy, c1)
+        print(f"  bucketed {strategy} on {shape} "
+              f"policy={policy.policy if policy else 'fixed'} "
+              f"backend={backend} mc={momentum}: bit-equal, "
+              f"collectives {c1} -> {c2}")
+
+    pol = make_policy("variance")
+    # (4,2): one data axis of 4 workers
+    run_case((4, 2), ("data", "model"), "allgather", expect=(2, 0))
+    run_case((4, 2), ("data", "model"), "gtopk", expect=(0, 4))
+    # hierarchical on one data axis: documented fallback to allgather
+    run_case((4, 2), ("data", "model"), "hierarchical", with_r2=True,
+             expect=(2, 0))
+    run_case((4, 2), ("data", "model"), "allgather", policy=pol,
+             expect=(2, 0))
+    run_case((4, 2), ("data", "model"), "gtopk", policy=pol,
+             expect=(0, 4))
+    run_case((4, 2), ("data", "model"), "allgather", comp="gaussiank",
+             backend="auto", expect=(2, 0))      # fused segmented kernels
+    run_case((4, 2), ("data", "model"), "gtopk", comp="gaussiank",
+             backend="auto", expect=(0, 4))      # fused x gtopk
+    run_case((4, 2), ("data", "model"), "allgather", policy=pol,
+             comp="gaussiank", backend="auto",
+             expect=(2, 0))   # adaptive x fused: segmented pass-A reuse
+    run_case((4, 2), ("data", "model"), "allgather", momentum=0.9,
+             with_r2=True, expect=(2, 0))        # DGC momentum correction
+    # (2,2,2): two data axes — genuine two-level hierarchical + gtopk
+    # rounds crossing BOTH axes
+    run_case((2, 2, 2), ("pod", "data", "model"), "hierarchical",
+             with_r2=True, expect=(4, 0))
+    run_case((2, 2, 2), ("pod", "data", "model"), "hierarchical",
+             comp="gaussiank", backend="auto", with_r2=True,
+             expect=(4, 0))   # fused x two-level hierarchical
+    run_case((2, 2, 2), ("pod", "data", "model"), "hierarchical",
+             with_r2=True, policy=pol, expect=(4, 0))
+    run_case((2, 2, 2), ("pod", "data", "model"), "gtopk", expect=(0, 4))
+    print("BUCKETED OK")
+
+
 def check_multipod():
     """Every compressor trains (loss decreases) on the 2x2x2 pod mesh;
     gaussiank additionally through every wire strategy (the gtopk rounds
@@ -398,4 +550,5 @@ def check_multipod():
 
 if __name__ == "__main__":
     {"eq2": check_eq2, "dense": check_dense, "gtopk": check_gtopk,
-     "multipod": check_multipod, "adaptk": check_adaptk}[sys.argv[1]]()
+     "multipod": check_multipod, "adaptk": check_adaptk,
+     "bucketed": check_bucketed}[sys.argv[1]]()

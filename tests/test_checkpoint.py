@@ -82,6 +82,94 @@ def test_load_missing_key_raises(tmp_path):
         load_state(path, extra)
 
 
+def _legacy_and_flat_states():
+    """The same TrainState in both residual layouts: a legacy per-leaf
+    state (what pre-bucketing checkpoints recorded) and its flat-bucket
+    twin, with deterministic non-trivial residual contents."""
+    from repro.dist.layout import build_layout, pack_residual_arrays
+
+    from repro.core import get_compressor
+
+    params = _params()
+    layout = build_layout(params, 2, 0.05, get_compressor("topk"))
+    legacy = init_train_state(params, sgd_momentum(0.9), workers=2,
+                              model_size=2, strategy="hierarchical")
+    rng = np.random.default_rng(3)
+    fill = lambda e: jnp.asarray(  # noqa: E731
+        rng.normal(size=e.shape).astype(np.float32))
+    legacy["resid"] = jax.tree.map(fill, legacy["resid"])
+    legacy["resid2"] = jax.tree.map(fill, legacy["resid2"])
+    flat = init_train_state(params, sgd_momentum(0.9), workers=2,
+                            model_size=2, strategy="hierarchical",
+                            layout=layout)
+    expect_resid = pack_residual_arrays(
+        layout, [np.asarray(x) for x in jax.tree.leaves(legacy["resid"])])
+    expect_resid2 = pack_residual_arrays(
+        layout, [np.asarray(x) for x in jax.tree.leaves(legacy["resid2"])])
+    return layout, legacy, flat, expect_resid, expect_resid2
+
+
+def test_legacy_per_leaf_checkpoint_migrates_to_flat_layout(tmp_path):
+    """A recorded legacy per-leaf-residual npz round-trips through the
+    migration shim into the flat bucketed layout with bit-equal residual
+    contents (ISSUE 5 satellite)."""
+    layout, legacy, flat, want_r, want_r2 = _legacy_and_flat_states()
+    path = str(tmp_path / "legacy.npz")
+    save_state(path, legacy)
+    restored = load_state(path, jax.tree.map(jnp.zeros_like, flat),
+                          layout=layout)
+    np.testing.assert_array_equal(np.asarray(restored["resid"]), want_r)
+    np.testing.assert_array_equal(np.asarray(restored["resid2"]), want_r2)
+    # non-residual leaves restore exactly, as always
+    for (p, a), b in zip(
+            jax.tree_util.tree_flatten_with_path(legacy["params"])[0],
+            jax.tree.leaves(restored["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=str(p))
+
+
+def test_flat_checkpoint_roundtrips_without_shim(tmp_path):
+    """A checkpoint written FROM the flat layout reloads directly (the
+    shim only fires for the legacy key shape)."""
+    layout, _, flat, _, _ = _legacy_and_flat_states()
+    rng = np.random.default_rng(9)
+    flat["resid"] = jnp.asarray(
+        rng.normal(size=flat["resid"].shape).astype(np.float32))
+    path = str(tmp_path / "flat.npz")
+    save_state(path, flat)
+    restored = load_state(path, jax.tree.map(jnp.zeros_like, flat),
+                          layout=layout)
+    np.testing.assert_array_equal(np.asarray(restored["resid"]),
+                                  np.asarray(flat["resid"]))
+
+
+def test_legacy_migration_fails_loudly(tmp_path):
+    layout, legacy, flat, _, _ = _legacy_and_flat_states()
+    like = jax.tree.map(jnp.zeros_like, flat)
+
+    # without the layout the legacy checkpoint cannot load (as before)
+    path = str(tmp_path / "legacy.npz")
+    save_state(path, legacy)
+    with pytest.raises(KeyError):
+        load_state(path, like)
+
+    # truncated checkpoint: one residual leaf missing
+    broken = dict(legacy, resid=dict(legacy["resid"]))
+    del broken["resid"]["nest"]
+    bad_path = str(tmp_path / "truncated.npz")
+    save_state(bad_path, broken)
+    with pytest.raises(KeyError):
+        load_state(bad_path, like, layout=layout)
+
+    # invalid layout: a leaf with the wrong padded length
+    mangled = dict(legacy, resid=jax.tree.map(lambda e: e, legacy["resid"]))
+    mangled["resid"]["w"] = mangled["resid"]["w"][:, :-2]
+    bad_path2 = str(tmp_path / "mangled.npz")
+    save_state(bad_path2, mangled)
+    with pytest.raises(ValueError):
+        load_state(bad_path2, like, layout=layout)
+
+
 def test_load_casts_to_like_dtype(tmp_path):
     """The loader restores into the structure's dtypes (the documented
     contract: 'shape/dtype validated' — dtype by cast)."""

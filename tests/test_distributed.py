@@ -51,6 +51,16 @@ def test_compressors_train_multipod():
 
 
 @pytest.mark.slow
+def test_bucketed_matches_per_leaf_bit_exact():
+    """Flat bucketed aggregation == per-leaf aggregation bit-for-bit on
+    the (4,2) and (2,2,2) meshes for all three wire strategies (fixed-k
+    and adaptive, reference and fused), with the jaxpr collective count
+    pinned to one codec pair per wire level per step (ISSUE 5)."""
+    out = _run("bucketed")
+    assert "BUCKETED OK" in out
+
+
+@pytest.mark.slow
 def test_adaptive_density_matches_simulation():
     """Adaptive layer-wise density (core/adaptk) on 8 host devices ==
     single-process simulation within 1e-7 for all three wire strategies,

@@ -1,7 +1,8 @@
 #!/usr/bin/env python
-"""Perf-regression gate over BENCH_fig4.json (stdlib only, CI `perf` job).
+"""Perf-regression gate over the benchmark JSONs (stdlib only, CI `perf`
+job).
 
-Checks, in order:
+fig4 (``BENCH_fig4.json``, schema ``fig4/v1``) — checks, in order:
 
 1. structural: for every shape, each fused method must report FEWER
    measured passes and lower wall time than its unfused counterpart —
@@ -16,12 +17,30 @@ Checks, in order:
    that produced the baseline, and the measured fused times are scaled
    by that factor — so the 1.5x headroom gates the PIPELINE, not the
    runner generation.  Structural check 1 stays tight regardless.
+4. dispatch-count pin (ISSUE 5): the ``dispatch-*`` rows carry the
+   jaxpr-counted collectives-per-step of the bucketed vs per-leaf
+   aggregation; bucketed must dispatch strictly fewer than its per-leaf
+   twin AND match the committed baseline EXACTLY — the counts are
+   deterministic, so any drift is a silent de-bucketing.
 
-``--update`` rewrites the baseline from the measured file instead of
-checking (run on the reference machine, commit the result).
+adaptk (``BENCH_adaptk.json``, gated when ``--adaptk-measured`` /
+``--adaptk-baseline`` are passed) — machine-independent invariants:
+
+* every policy's allocation is budget-exact;
+* the DGC warmup peak is >= the final budget (warmup actually ran);
+* the true adaptive run's tail accuracy neither collapses against the
+  fixed-k run in the same file (>= fixed - 0.15) nor regresses > 0.1
+  against the committed baseline;
+* every baseline policy is still measured.
+
+``--update`` rewrites the baseline(s) from the measured file(s) instead
+of checking (run on the reference machine, commit the result).
 
 Usage:
   python tools/check_perf.py BENCH_fig4.json benchmarks/baselines/fig4.json
+  python tools/check_perf.py BENCH_fig4.json benchmarks/baselines/fig4.json \
+      --adaptk-measured BENCH_adaptk.json \
+      --adaptk-baseline benchmarks/baselines/adaptk.json
   python tools/check_perf.py --update BENCH_fig4.json \
       benchmarks/baselines/fig4.json
 """
@@ -96,6 +115,90 @@ def check(measured: dict, baseline: dict, max_regression: float) -> list:
                 f"{key[1]}@{key[0]}: {got['ms']}ms (speed-normalized "
                 f"{norm_ms:.1f}ms at x{speed:.2f}) > {max_regression}x "
                 f"baseline {base['ms']}ms")
+    # 4. bucketed dispatch counts: fewer than per-leaf, pinned to baseline
+    errors += check_dispatch(measured, baseline)
+    return errors
+
+
+def check_dispatch(measured: dict, baseline: dict) -> list:
+    """The collectives-per-step rows are deterministic jaxpr counts —
+    gate them structurally (bucketed < per-leaf) and pin them exactly."""
+    errors = []
+    bucketed = [key for key in measured if key[1] == "dispatch-bucketed"]
+    if not bucketed:
+        errors.append("no dispatch-bucketed rows in measured file")
+    for shape, method in bucketed:
+        twin = (shape, "dispatch-perleaf")
+        if twin not in measured:
+            errors.append(f"{method}@{shape}: no dispatch-perleaf twin row")
+            continue
+        b, p = measured[(shape, method)], measured[twin]
+        if b["passes"] >= p["passes"]:
+            errors.append(f"{method}@{shape}: collectives {b['passes']} >= "
+                          f"per-leaf {p['passes']}")
+    for key, base in baseline.items():
+        if key[1] != "dispatch-bucketed":
+            continue
+        got = measured.get(key)
+        if got is None:
+            errors.append(f"{key[1]}@{key[0]}: missing from measured file")
+        elif got["passes"] != base["passes"]:
+            errors.append(
+                f"{key[1]}@{key[0]}: collectives {got['passes']} != "
+                f"baseline {base['passes']} (bucketed dispatch count is "
+                "deterministic — drift means de-bucketing)")
+    return errors
+
+
+def load_adaptk(path: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    if not isinstance(data.get("policies"), dict) or not data["policies"]:
+        raise SystemExit(f"{path}: no policies section (not an adaptk "
+                         "benchmark artifact?)")
+    return data
+
+
+def check_adaptk(measured: dict, baseline: dict) -> list:
+    """Every gated field is REQUIRED: a benchmark refactor that renames
+    or drops one must fail the gate, not silently skip the check."""
+    errors = []
+    for name, pol in measured["policies"].items():
+        missing = [k for k in ("budget_exact", "k_total_final",
+                               "k_total_warmup_peak") if k not in pol]
+        if missing:
+            errors.append(f"adaptk/{name}: missing gated fields {missing}")
+            continue
+        if not pol["budget_exact"]:
+            errors.append(f"adaptk/{name}: allocation not budget-exact")
+        if pol["k_total_warmup_peak"] < pol["k_total_final"]:
+            errors.append(f"adaptk/{name}: warmup peak "
+                          f"{pol['k_total_warmup_peak']} < final "
+                          f"{pol['k_total_final']} (density warmup "
+                          "did not run)")
+    for name in baseline["policies"]:
+        if name not in measured["policies"]:
+            errors.append(f"adaptk/{name}: policy missing from measured "
+                          "file")
+    fixed_acc = measured.get("fixed", {}).get("tail_acc")
+    run_acc = measured.get("adaptive_run", {}).get("tail_acc")
+    if fixed_acc is None or run_acc is None:
+        errors.append("adaptk: fixed.tail_acc / adaptive_run.tail_acc "
+                      "missing from measured file (accuracy gate cannot "
+                      "run)")
+        return errors
+    if run_acc < fixed_acc - 0.15:
+        errors.append(
+            f"adaptk/train: adaptive tail_acc {run_acc:.3f} collapsed vs "
+            f"fixed-k {fixed_acc:.3f}")
+    base_acc = baseline.get("adaptive_run", {}).get("tail_acc")
+    if base_acc is None:
+        errors.append("adaptk: baseline missing adaptive_run.tail_acc "
+                      "(regenerate it with --update)")
+    elif run_acc < base_acc - 0.1:
+        errors.append(
+            f"adaptk/train: tail_acc {run_acc:.3f} > 0.1 below baseline "
+            f"{base_acc:.3f}")
     return errors
 
 
@@ -104,18 +207,34 @@ def main(argv=None) -> int:
     ap.add_argument("measured", help="freshly emitted BENCH_fig4.json")
     ap.add_argument("baseline", help="committed benchmarks/baselines/fig4.json")
     ap.add_argument("--max-regression", type=float, default=1.5)
+    ap.add_argument("--adaptk-measured", default="",
+                    help="freshly emitted BENCH_adaptk.json (enables the "
+                         "adaptk gate)")
+    ap.add_argument("--adaptk-baseline", default="",
+                    help="committed benchmarks/baselines/adaptk.json")
     ap.add_argument("--update", action="store_true",
-                    help="rewrite the baseline from the measured file")
+                    help="rewrite the baseline(s) from the measured file(s)")
     args = ap.parse_args(argv)
+
+    if bool(args.adaptk_measured) != bool(args.adaptk_baseline):
+        raise SystemExit("--adaptk-measured and --adaptk-baseline go "
+                         "together")
 
     if args.update:
         load(args.measured)  # schema validation
         shutil.copyfile(args.measured, args.baseline)
         print(f"baseline updated: {args.baseline}")
+        if args.adaptk_measured:
+            load_adaptk(args.adaptk_measured)
+            shutil.copyfile(args.adaptk_measured, args.adaptk_baseline)
+            print(f"baseline updated: {args.adaptk_baseline}")
         return 0
 
     errors = check(load(args.measured), load(args.baseline),
                    args.max_regression)
+    if args.adaptk_measured:
+        errors += check_adaptk(load_adaptk(args.adaptk_measured),
+                               load_adaptk(args.adaptk_baseline))
     for e in errors:
         print(f"PERF FAIL: {e}")
     if not errors:
