@@ -19,24 +19,29 @@ the shard_map version-compat shims.
 """
 from repro.dist import aggregate, compat, layout, sharding
 from repro.dist.aggregate import (STRATEGIES, aggregate_bucketed,
+                                  aggregate_bucketed_chunked,
                                   aggregate_compressed, aggregate_dense,
                                   bucket_compress, gtopk_simulate,
                                   init_residuals, resolve_strategy,
                                   strategy_wire_pairs)
-from repro.dist.layout import (BucketLayout, build_layout, collective_count,
+from repro.dist.layout import (BucketLayout, ChunkPlan, build_chunk_plan,
+                               build_layout, chunk_view, collective_count,
                                init_flat_residual, leaf_key_salt,
                                pack_grads, pack_residual_arrays,
-                               unpack_residual_arrays, unpack_tree)
+                               unpack_residual_arrays, unpack_tree,
+                               validate_chunk_plan)
 from repro.dist.sharding import (cache_specs, param_spec, param_specs,
                                  train_state_specs)
 
 __all__ = [
     "aggregate", "compat", "layout", "sharding",
-    "STRATEGIES", "aggregate_bucketed", "aggregate_compressed",
-    "aggregate_dense", "bucket_compress", "gtopk_simulate",
-    "init_residuals", "resolve_strategy", "strategy_wire_pairs",
-    "BucketLayout", "build_layout", "collective_count",
-    "init_flat_residual", "leaf_key_salt", "pack_grads",
-    "pack_residual_arrays", "unpack_residual_arrays", "unpack_tree",
+    "STRATEGIES", "aggregate_bucketed", "aggregate_bucketed_chunked",
+    "aggregate_compressed", "aggregate_dense", "bucket_compress",
+    "gtopk_simulate", "init_residuals", "resolve_strategy",
+    "strategy_wire_pairs",
+    "BucketLayout", "ChunkPlan", "build_chunk_plan", "build_layout",
+    "chunk_view", "collective_count", "init_flat_residual",
+    "leaf_key_salt", "pack_grads", "pack_residual_arrays",
+    "unpack_residual_arrays", "unpack_tree", "validate_chunk_plan",
     "cache_specs", "param_spec", "param_specs", "train_state_specs",
 ]

@@ -81,11 +81,12 @@ from repro.dist import compat
 # geometry + wire model live in dist/layout.py (single source for both
 # dispatch granularities); re-exported here for API compatibility
 from repro.dist.layout import (STRATEGIES, BucketLayout,  # noqa: F401
-                               _log2_exact, collective_count, flat_dims,
-                               leaf_key_salt, leaf_path_name, leaf_plan,
-                               leaf_plan_adaptive, pack_grads,
-                               resolve_strategy, strategy_wire_pairs,
-                               unpack_tree)
+                               ChunkPlan, _log2_exact, chunk_view,
+                               collective_count, flat_dims, leaf_key_salt,
+                               leaf_path_name, leaf_plan, leaf_plan_adaptive,
+                               pack_grads, resolve_strategy,
+                               strategy_wire_pairs, unpack_tree,
+                               validate_chunk_plan)
 from repro.kernels.ef_fused.segmented import (rows_compress_ef, rows_pass_a,
                                               segmented_compress_ef,
                                               segmented_pass_a)
@@ -967,4 +968,190 @@ def aggregate_bucketed(grads, resid, layout: BucketLayout,
         metrics["density_budget"] = (K_eff.astype(jnp.float32)
                                      / layout.d_total)
     new_resid2 = new_R2.reshape(-1) if resid2 is not None else None
+    return agg, new_E.reshape(-1), new_resid2, new_adapt, metrics
+
+
+# ---------------------------------------------------------------------------
+# chunked bucketed aggregation: overlap the wire with the backward pass
+# (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+
+def aggregate_bucketed_chunked(grads, resid, layout: BucketLayout,
+                               plan: ChunkPlan, spec: CompressorSpec,
+                               data_axes, model_axis: str, key, *,
+                               strategy: str = "allgather",
+                               hierarchical: bool = False, resid2=None,
+                               world: int = 1, codec_dtype=None,
+                               momentum_correction: float = 0.0,
+                               backend: str = "auto", density_policy=None,
+                               adapt_state=None, step=None):
+    """:func:`aggregate_bucketed` re-dispatched as ``plan.n_chunks``
+    independent compress+wire chains — the overlapped schedule
+    (DESIGN.md §11).
+
+    Identical semantics and BIT-identical results (asserted by
+    tests/_dist_check.py ``chunked``): every chunk group runs the same
+    per-segment selection, salting, residual update and wire arithmetic
+    as its column window of the unchunked bucket, via
+    :func:`layout.chunk_view` sub-layouts.  What changes is dataflow
+    shape: chunk ``c``'s collective depends only on chunk ``c``'s
+    gradient leaves and residual window, so when the train step's
+    custom-vjp seam (train/step.py) releases chunk grads incrementally,
+    chunk ``c``'s compress + collective can execute while chunk ``c+1``'s
+    backward is still in flight — the double-buffered overlap.  The only
+    cross-chunk barrier is the adaptive allocator, which needs every
+    leaf's pass-A moments BEFORE any chunk's budget is final (one psum,
+    not a wire message).
+
+    Dispatch cost: ``plan.n_chunks`` collectives per wire level (N
+    all-gathers / 2N for hierarchical / N·log2(W) gTop-k rounds) —
+    reported in ``metrics["collectives_per_step"]``; total wire volume
+    is unchanged.  ``plan`` must tile this exact ``layout`` (validated
+    loudly)."""
+    axes = tuple(data_axes)
+    mc = float(momentum_correction)
+    adaptive = density_policy is not None
+    if layout.spec_name != spec.name:
+        raise ValueError(f"layout was built for compressor "
+                         f"{layout.spec_name!r}, got {spec.name!r}")
+    if layout.adaptive != adaptive:
+        raise ValueError(
+            f"layout adaptive={layout.adaptive} does not match "
+            f"density_policy={'set' if adaptive else 'None'}; rebuild the "
+            "layout with the matching density_policy")
+    validate_chunk_plan(layout, plan)
+    strategy, hier, gtopk, outer_axis, inner_axes, n_pods, n_inner, world = \
+        _wire_config(strategy, hierarchical, axes, resid2, world, mc,
+                     adaptive, spec)
+
+    M, D = layout.model_size, layout.d_row_total
+    E = resid.reshape(M, D)
+    R2 = resid2.reshape(M, D) if resid2 is not None else None
+
+    g_leaves = jax.tree.leaves(grads)
+    if len(g_leaves) != len(layout.segments):
+        raise ValueError(f"tree has {len(g_leaves)} leaves, layout has "
+                         f"{len(layout.segments)} segments")
+    views = [chunk_view(layout, grp) for grp in plan.groups]
+    # per-chunk packing: chunk c's bucket is built from chunk c's leaves
+    # ONLY — the dataflow seam the overlap rides on (no edge from later
+    # chunks' gradients into this chunk's compress or collective)
+    Gs = [pack_grads(v, g_leaves[grp.seg_lo:grp.seg_hi], resid.dtype)
+          for grp, v in zip(plan.groups, views)]
+    Es = [E[:, grp.row_off:grp.row_off + grp.d_row] for grp in plan.groups]
+    R2s = ([R2[:, grp.row_off:grp.row_off + grp.d_row]
+            for grp in plan.groups] if R2 is not None
+           else [None] * plan.n_chunks)
+
+    # -- adaptive phase 1: per-chunk pass-A moments, ONE global allocation
+    # BEFORE any chunk's wire dispatch.  Signals are gathered in global
+    # segment order, so the pmean/blend/budget/allocate chain is the
+    # same arithmetic on the same vector as the unchunked path.
+    new_adapt = adapt_state
+    k_alloc = K_eff = None
+    chunk_stats = [None] * plan.n_chunks
+    if adaptive:
+        fusedp = resolve_backend(backend, spec)
+        sigs = []
+        for c, view in enumerate(views):
+            if fusedp:
+                stats = segmented_pass_a(
+                    Gs[c], Es[c], [(s.row_off, s.d_row)
+                                   for s in view.segments], spec.name)
+                chunk_stats[c] = stats
+                for s, rs in zip(view.segments, stats):
+                    sm, sq, mx = _stats_reduce(rs)
+                    sigs.append(adaptk.leaf_signal(density_policy.policy,
+                                                   s.size, sm, sq, mx))
+            else:
+                for s in view.segments:
+                    a, b = s.row_off, s.row_off + s.d_row
+                    _, (sm, sq, mx) = pass_a_stats_rows(
+                        Gs[c][:, a:b], Es[c][:, a:b], spec.name, False)
+                    sigs.append(adaptk.leaf_signal(density_policy.policy,
+                                                   s.size, sm, sq, mx))
+        signal = jax.lax.pmean(jnp.stack(sigs), axes)
+        signal, new_adapt = adaptk.blend_signal(adapt_state, signal,
+                                                density_policy.ema)
+        K = adaptk.budget([s.size for s in layout.segments], layout.ratio,
+                          density_policy, step)
+        k_alloc, K_eff = adaptk.allocate(
+            K, signal, [s.k_lo for s in layout.segments],
+            [s.k_hi for s in layout.segments])
+
+    # -- per-chunk compress + wire.  Below this point there are NO data
+    # edges between chunks: XLA's scheduler is free to run chunk c's
+    # collective while chunk c+1 is still compressing (double buffering
+    # at the dataflow level; see DESIGN.md §11 for the CPU/interpret
+    # caveat).
+    means, new_E_blocks, new_R2_blocks = [], [], []
+    nnz_local = jnp.zeros((), jnp.float32)
+    for c, (grp, view) in enumerate(zip(plan.groups, views)):
+        ka = k_alloc[grp.seg_lo:grp.seg_hi] if adaptive else None
+        values, indices, new_Ec, new_Vc = bucket_compress(
+            Gs[c], Es[c], view, spec, key, codec_dtype=codec_dtype,
+            momentum=mc, V=R2s[c] if mc > 0.0 else None, backend=backend,
+            k_alloc=ka, seg_stats=chunk_stats[c])
+        nnz_local += codec.nnz(indices).astype(jnp.float32)
+
+        if gtopk:
+            dense_sum, merge_drop = _gtopk_reduce_bucket(
+                values, indices, axes, view, codec_dtype)
+            mean_c = dense_sum / world
+            new_Ec = new_Ec + merge_drop.astype(new_Ec.dtype)
+        else:
+            mean_c = _gather_mean(values, indices, inner_axes, n_inner,
+                                  view.d_row_total, jnp.float32)
+
+        if hier:
+            g2 = mean_c.astype(R2.dtype) if adaptive else mean_c
+            v2, i2, new_R2c, _ = bucket_compress(
+                g2, R2s[c], view, spec, key, codec_dtype=codec_dtype,
+                backend=backend, k_alloc=ka, key_fold=1)
+            mean_c = _gather_mean(v2, i2, outer_axis, n_pods,
+                                  view.d_row_total, jnp.float32)
+            nnz_local += codec.nnz(i2).astype(jnp.float32)
+        elif mc > 0.0:
+            new_R2c = new_Vc
+        else:
+            new_R2c = R2s[c]
+        means.append(mean_c)
+        new_E_blocks.append(new_Ec)
+        new_R2_blocks.append(new_R2c)
+
+    # materialize the joined mean before unpacking: without the barrier
+    # XLA fuses the concatenate into downstream consumers (e.g. the
+    # optimizer's mul+add), where FMA contraction rounds differently
+    # than the unchunked program — a 1-ULP drift that breaks the
+    # bit-identity contract.  The unchunked path materializes its mean
+    # at the wire collective, so this only restores parity.
+    mean = jax.lax.optimization_barrier(jnp.concatenate(means, axis=1))
+    new_E = jnp.concatenate([blk.astype(E.dtype) for blk in new_E_blocks],
+                            axis=1)
+    agg = unpack_tree(layout, mean, like=grads)
+    bits_dense = float(sum(2 * g.size * jnp.dtype(g.dtype).itemsize * 8
+                           for g in g_leaves))
+    metrics = {
+        "density": jax.lax.pmean(nnz_local / layout.d_total, axes),
+        "density_cap": jnp.float32(
+            M * layout.k_cap_total / layout.d_total),
+        "comm_bits_sparse": jnp.float32(
+            layout.comm_bits_sparse(strategy, world, n_pods, codec_dtype)),
+        "comm_bits_dense": jnp.float32(bits_dense),
+        "wire_bytes": jnp.float32(
+            layout.comm_bits_sparse(strategy, world, n_pods,
+                                    codec_dtype) / 8.0),
+        # the ONE metric the chunked schedule changes: same wire volume,
+        # N collectives per level instead of 1
+        "collectives_per_step": jnp.float32(
+            plan.collectives(strategy, world, n_pods)),
+    }
+    if adaptive:
+        metrics["k_total"] = K_eff.astype(jnp.float32)
+        metrics["density_budget"] = (K_eff.astype(jnp.float32)
+                                     / layout.d_total)
+    new_resid2 = (jnp.concatenate(
+        [blk.astype(R2.dtype) for blk in new_R2_blocks], axis=1
+        ).reshape(-1) if resid2 is not None else None)
     return agg, new_E.reshape(-1), new_resid2, new_adapt, metrics

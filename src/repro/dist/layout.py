@@ -368,6 +368,137 @@ def unpack_tree(layout: BucketLayout, bucket: jax.Array, treedef=None,
     return jax.tree.unflatten(treedef, leaves)
 
 
+# ---------------------------------------------------------------------------
+# chunked schedule geometry (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+
+class ChunkGroup(NamedTuple):
+    """One contiguous run of leaf segments of the chunked wire schedule.
+
+    ``[seg_lo, seg_hi)`` indexes into ``BucketLayout.segments``; the
+    offsets/extents are the group's static column window of the global
+    ``(model_size, d_row_total)`` bucket and ``(model_size, k_cap_total)``
+    wire block."""
+    index: int
+    seg_lo: int
+    seg_hi: int
+    row_off: int       # first bucket column of the group
+    d_row: int         # bucket columns the group spans
+    cap_off: int       # first wire-block column of the group
+    k_cap: int         # wire-block columns the group spans
+
+
+class ChunkPlan(NamedTuple):
+    """Static partition of a ``BucketLayout`` into N contiguous,
+    leaf-aligned chunk groups (DESIGN.md §11).
+
+    Chunk boundaries never split a leaf segment: selection, RNG salting
+    and the codec index space are all per-segment, so a leaf-aligned cut
+    leaves every segment's computation byte-identical to the unchunked
+    schedule — only the wire dispatch granularity changes.  ``n_chunks``
+    is therefore clamped to the segment count (``requested`` records the
+    caller's ask)."""
+    n_chunks: int
+    requested: int
+    groups: Tuple[ChunkGroup, ...]
+
+    def collectives(self, strategy: str, world: int, n_pods: int = 1) -> int:
+        """Codec-pair collectives per step under this plan: the per-level
+        count of the unchunked bucket, once per chunk."""
+        return self.n_chunks * collective_count(strategy, world, n_pods,
+                                                leaves=1)
+
+
+def build_chunk_plan(layout: BucketLayout, n_chunks: int) -> ChunkPlan:
+    """Partition the layout's segments into ``n_chunks`` contiguous
+    groups, balanced by cumulative bucket width ``d_row``.
+
+    Deterministic greedy cut: boundary j lands on the first segment whose
+    cumulative width reaches ``j/n`` of the total (while leaving enough
+    segments for the remaining groups) — same inputs, same plan, on every
+    process.  ``n_chunks`` is clamped to the segment count (a chunk
+    cannot be narrower than one leaf); ``n_chunks=1`` is the unchunked
+    schedule."""
+    if n_chunks < 1:
+        raise ValueError(f"n_chunks must be >= 1, got {n_chunks}")
+    segs = layout.segments
+    n = min(int(n_chunks), len(segs))
+    cums = []
+    tot = 0
+    for s in segs:
+        tot += s.d_row
+        cums.append(tot)
+    bounds = [0]
+    for j in range(1, n):
+        target = j * tot / n
+        lo, hi = bounds[-1] + 1, len(segs) - (n - j)
+        cut = hi
+        for i in range(lo, hi + 1):
+            if cums[i - 1] >= target:
+                cut = i
+                break
+        bounds.append(cut)
+    bounds.append(len(segs))
+    groups = []
+    for c in range(n):
+        first, last = segs[bounds[c]], segs[bounds[c + 1] - 1]
+        groups.append(ChunkGroup(
+            index=c, seg_lo=bounds[c], seg_hi=bounds[c + 1],
+            row_off=first.row_off,
+            d_row=last.row_off + last.d_row - first.row_off,
+            cap_off=first.cap_off,
+            k_cap=last.cap_off + last.k_cap - first.cap_off))
+    return ChunkPlan(n_chunks=n, requested=int(n_chunks),
+                     groups=tuple(groups))
+
+
+def validate_chunk_plan(layout: BucketLayout, plan: ChunkPlan) -> None:
+    """Fail loudly if ``plan`` does not tile ``layout`` exactly — a plan
+    built from a different layout silently corrupts the residual
+    windows, so this runs at every chunked-aggregation entry."""
+    if not plan.groups or plan.n_chunks != len(plan.groups):
+        raise ValueError(f"malformed ChunkPlan: n_chunks={plan.n_chunks}, "
+                         f"{len(plan.groups)} groups")
+    seg, row, cap = 0, 0, 0
+    for g in plan.groups:
+        if (g.seg_lo, g.row_off, g.cap_off) != (seg, row, cap):
+            raise ValueError(
+                f"chunk {g.index} starts at (seg={g.seg_lo}, "
+                f"row={g.row_off}, cap={g.cap_off}), expected "
+                f"({seg}, {row}, {cap}) — plan does not tile this layout")
+        if g.seg_hi <= g.seg_lo:
+            raise ValueError(f"chunk {g.index} is empty")
+        seg, row, cap = g.seg_hi, g.row_off + g.d_row, g.cap_off + g.k_cap
+    if (seg, row, cap) != (len(layout.segments), layout.d_row_total,
+                           layout.k_cap_total):
+        raise ValueError(
+            f"plan covers (seg={seg}, row={row}, cap={cap}) but layout "
+            f"has ({len(layout.segments)}, {layout.d_row_total}, "
+            f"{layout.k_cap_total}) — plan built from a different layout?")
+
+
+def chunk_view(layout: BucketLayout, group: ChunkGroup) -> BucketLayout:
+    """The group's window of the layout as a standalone ``BucketLayout``.
+
+    Segments keep their name, salt, static plan and order; only
+    ``row_off``/``cap_off`` are rebased to the group's window.  Because
+    every bucketed primitive (``bucket_compress``, ``encode_bucket_topk``,
+    ``_gather_mean`` decode, the gTop-k merge) is per-segment over
+    ``[row_off, row_off + d_row)`` and the codec sentinel is offset-
+    independent, running them on the sub-layout over the window slice is
+    bit-identical to the same columns of the full-bucket run — which is
+    what makes the chunked schedule a pure re-dispatch."""
+    segs = tuple(
+        s._replace(row_off=s.row_off - group.row_off,
+                   cap_off=s.cap_off - group.cap_off)
+        for s in layout.segments[group.seg_lo:group.seg_hi])
+    return BucketLayout(segments=segs, model_size=layout.model_size,
+                        ratio=layout.ratio, spec_name=layout.spec_name,
+                        adaptive=layout.adaptive,
+                        d_row_total=group.d_row, k_cap_total=group.k_cap)
+
+
 def init_flat_residual(layout: BucketLayout, dtype=jnp.float32) -> jax.Array:
     """Zero flat residual bucket, ``(model_size * d_row_total,)`` —
     the flat-buffer replacement for the per-leaf residual tree."""

@@ -363,8 +363,23 @@ def count_wire_collectives(jaxpr) -> Dict[str, int]:
 
     ``messages`` is the logical codec-pair collective count: the values
     and indices arrays of one pair travel as two array collectives, so
-    ``messages = (all_gather + ppermute) / 2``.
+    ``messages = (all_gather + ppermute) / 2``.  Under the chunked
+    schedule (DESIGN.md §11) ``messages`` scales ×N with the chunk
+    count — the collectives are per chunk group, still independent of
+    leaf count.
     """
     c = count_jaxpr_primitives(jaxpr, ("all_gather", "ppermute"))
     c["messages"] = (c["all_gather"] + c["ppermute"]) // 2
     return c
+
+
+def count_schedule_markers(jaxpr) -> int:
+    """Number of ``optimization_barrier`` eqns in a traced step.
+
+    The chunked train step's gradient seam (train/step.py
+    ``_chunk_grad_seam``) plants exactly ONE barrier per chunk group in
+    the backward pass, so on a seamed trace this counts the gradient-
+    boundary chunks of the overlapped schedule; an unchunked trace of
+    this codebase contains none."""
+    return count_jaxpr_primitives(
+        jaxpr, ("optimization_barrier",))["optimization_barrier"]

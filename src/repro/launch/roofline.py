@@ -105,6 +105,38 @@ def roofline_terms(flops: float, bytes_accessed: float, coll_bytes: float,
                     model_flops_per_chip / flops if flops else 0.0)
 
 
+def overlapped_collective_s(compute_s: float, collective_s: float,
+                            n_chunks: int = 1) -> float:
+    """Step-time estimate of the chunked overlapped schedule
+    (DESIGN.md §11).
+
+    Serial (``n_chunks <= 1``): compute + wire back-to-back.  With N
+    chunks the software pipeline runs chunk c's collective while chunk
+    c±1 computes, so the longer phase is exposed in full and the shorter
+    one only for the pipeline fill/drain — ``max + min/N``.  Equals the
+    serial time at N=1 and decreases monotonically toward ``max`` as N
+    grows (property-tested in tests/test_hlo_cost.py)."""
+    if n_chunks <= 1:
+        return compute_s + collective_s
+    lo, hi = sorted((float(compute_s), float(collective_s)))
+    return hi + lo / n_chunks
+
+
+def overlap_report(r: Roofline, n_chunks: int) -> Dict[str, float]:
+    """Price a compiled step under the chunked schedule: serial vs
+    overlapped step seconds and the fraction of the step the pipeline
+    hides.  Compute here is the roofline max of the FLOP and HBM terms
+    (whichever bounds the non-wire phase)."""
+    compute_s = max(r.compute_s, r.memory_s)
+    serial = compute_s + r.collective_s
+    overlapped = overlapped_collective_s(compute_s, r.collective_s,
+                                         n_chunks)
+    return {"n_chunks": float(n_chunks), "serial_s": serial,
+            "overlapped_s": overlapped,
+            "hidden_frac": ((serial - overlapped) / serial
+                            if serial > 0 else 0.0)}
+
+
 def model_flops(cfg, n_params: int, n_active: int, kind: str,
                 global_batch: int, seq_len: int) -> float:
     """6·N·D for training, 2·N·D forward-only (global, all chips)."""

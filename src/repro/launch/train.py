@@ -47,6 +47,15 @@ def parse_args(argv=None):
                          "buffer) or the legacy per-leaf loop (one "
                          "collective chain per gradient leaf) — results "
                          "are bit-identical")
+    ap.add_argument("--chunks", type=int, default=1,
+                    help="split the bucketed wire block into N leaf-"
+                         "aligned chunk groups and issue one collective "
+                         "chain per chunk as the backward pass releases "
+                         "its grads (DESIGN.md §11) — overlaps wire with "
+                         "compute at N collectives per level; 1 = the "
+                         "unchunked schedule; results are bit-identical "
+                         "for any N (needs --pipeline bucketed and a "
+                         "sparse compressor)")
     ap.add_argument("--density-policy", default="",
                     choices=["", "none", "uniform", "variance", "absmax"],
                     help="adaptive layer-wise density (DESIGN.md §9): "
@@ -148,6 +157,13 @@ def main(argv=None):
         layout = build_layout(params, model_axis_size(mesh), args.ratio,
                               get_compressor(args.compressor),
                               density_policy=policy)
+    if args.chunks < 1:
+        raise SystemExit(f"--chunks must be >= 1, got {args.chunks}")
+    if args.chunks > 1 and layout is None:
+        raise SystemExit(
+            "--chunks > 1 needs the bucketed sparse pipeline: use "
+            "--pipeline bucketed with a sparse compressor (the chunked "
+            "schedule re-dispatches the flat wire block, DESIGN.md §11)")
     state = init_train_state(
         params, opt, workers=data_world_size(mesh),
         model_size=model_axis_size(mesh),
@@ -162,11 +178,12 @@ def main(argv=None):
                            compressor=args.compressor, ratio=args.ratio,
                            strategy=strategy, backend=args.backend,
                            remat=not args.smoke, seed=args.seed,
-                           density_policy=policy, layout=layout)
+                           density_policy=policy, layout=layout,
+                           chunks=args.chunks)
 
     print(f"arch={cfg.name} compressor={args.compressor} ratio={args.ratio} "
           f"strategy={strategy} backend={args.backend} mesh={args.mesh} "
-          f"pipeline={args.pipeline} "
+          f"pipeline={args.pipeline} chunks={args.chunks} "
           f"density_policy={pol_name or 'fixed-k'} steps={args.steps}")
     t0 = time.time()
     for i in range(args.steps):

@@ -10,6 +10,12 @@ worker).  Two storage layouts (DESIGN.md §10):
   aggregation path (``aggregate_bucketed``) reads and writes.
 
 Both shard workers -> data axes (see ``dist/sharding.train_state_specs``).
+
+The state is chunk-count INDEPENDENT: the chunked overlapped schedule
+(DESIGN.md §11) only re-dispatches the wire over static windows of the
+same flat residual buffer, so nothing here varies with ``--chunks`` and
+a checkpoint written under any chunk count resumes under any other
+(pinned by tests/test_checkpoint.py).
 """
 from __future__ import annotations
 

@@ -25,6 +25,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.compressors import get_compressor
 from repro.dist import aggregate, compat
+from repro.dist.layout import build_chunk_plan
 from repro.dist.sharding import batch_specs, param_spec, train_state_specs
 from repro.launch.mesh import data_axes_of, data_world_size, model_axis_size
 from repro.models import loss_fn as model_loss_fn
@@ -57,6 +58,38 @@ def worker_index(data_axes):
     return idx
 
 
+def _chunk_grad_seam(groups):
+    """custom-vjp identity over the flat param-leaf tuple whose BACKWARD
+    wraps each chunk group's cotangents in one ``optimization_barrier``
+    (DESIGN.md §11).
+
+    The forward is a no-op, so loss values and gradients are bit-exact.
+    The barriers make the chunk structure explicit in the backward
+    jaxpr: every group's grads become available as one unit with no data
+    edge to any other group's cotangents, which is the boundary
+    ``aggregate_bucketed_chunked`` overlaps against — chunk c's compress
+    + collective can be scheduled as soon as chunk c's barrier resolves,
+    while chunk c+1's backward is still in flight.  One barrier per
+    group, countable via ``launch.hlo_cost.count_schedule_markers``."""
+    @jax.custom_vjp
+    def seam(leaves):
+        return leaves
+
+    def fwd(leaves):
+        return leaves, None
+
+    def bwd(_, cts):
+        out = list(cts)
+        for g in groups:
+            block = jax.lax.optimization_barrier(
+                tuple(out[g.seg_lo:g.seg_hi]))
+            out[g.seg_lo:g.seg_hi] = list(block)
+        return (tuple(out),)
+
+    seam.defvjp(fwd, bwd)
+    return seam
+
+
 def make_train_step(cfg, mesh, optimizer: Optimizer, lr_fn: Callable,
                     *, compressor: Optional[str] = "gaussiank",
                     ratio: float = 0.001, strategy: str = "allgather",
@@ -65,7 +98,7 @@ def make_train_step(cfg, mesh, optimizer: Optimizer, lr_fn: Callable,
                     loss_fn: Optional[Callable] = None, codec_dtype=None,
                     momentum_correction: float = 0.0,
                     backend: str = "auto", density_policy=None,
-                    layout=None):
+                    layout=None, chunks: int = 1):
     """Returns (step_fn, in_specs, out_specs).  ``step_fn(state, batch) ->
     (state, metrics)`` is already jit+shard_map wrapped for ``mesh``.
     ``compressor=None``/"none" gives the Dense-SGD baseline.
@@ -91,7 +124,18 @@ def make_train_step(cfg, mesh, optimizer: Optimizer, lr_fn: Callable,
     layer-wise density (DESIGN.md §9): the per-leaf budgets become
     traced per-step quantities steered by the pass-A gradient moments;
     the EMA controller state lives in ``state["adaptk"]`` (allocate it
-    via ``init_train_state(..., density_policy=...)``)."""
+    via ``init_train_state(..., density_policy=...)``).
+
+    ``chunks`` (with a ``layout``) switches to the chunked overlapped
+    schedule (DESIGN.md §11): the bucket is split into N leaf-aligned
+    chunk groups, a custom-vjp seam releases each group's gradients as
+    one unit during the backward pass, and
+    ``aggregate_bucketed_chunked`` issues one compress+collective chain
+    per group — bit-identical results, N collectives per wire level.
+    ``chunks=1`` (default) is exactly today's unchunked step.  The
+    TrainState is chunk-count independent (the flat residual layout
+    never changes), so checkpoints move freely across ``chunks``
+    settings."""
     data_axes = data_axes_of(mesh)
     strategy = aggregate.resolve_strategy(strategy, hierarchical)
     joint = _joint(data_axes)
@@ -114,6 +158,19 @@ def make_train_step(cfg, mesh, optimizer: Optimizer, lr_fn: Callable,
         if layout.adaptive != (density_policy is not None):
             raise ValueError("layout density mode does not match "
                              "density_policy; rebuild the layout")
+    if chunks < 1:
+        raise ValueError(f"chunks must be >= 1, got {chunks}")
+    chunk_plan = None
+    if chunks > 1:
+        if dense or layout is None:
+            raise ValueError(
+                "chunks > 1 needs the bucketed sparse pipeline: pass "
+                "layout= (the chunked schedule re-dispatches the flat "
+                "wire block; the per-leaf and Dense-SGD paths have no "
+                "bucket to chunk)")
+        chunk_plan = build_chunk_plan(layout, chunks)
+    seam = (_chunk_grad_seam(chunk_plan.groups)
+            if chunk_plan is not None else None)
     base_key = jax.random.PRNGKey(seed)
     constrain = lambda tree: constrain_params(tree, "model", msize)  # noqa: E731
     loss = loss_fn or (lambda p, b: model_loss_fn(p, cfg, b, remat=remat,
@@ -128,7 +185,16 @@ def make_train_step(cfg, mesh, optimizer: Optimizer, lr_fn: Callable,
                 "density_policy=...) — without it the EMA would be "
                 "silently disabled")
         params = constrain_params(state["params"], "model", msize)
-        (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(
+        if seam is None:
+            grad_loss = loss
+        else:
+            # route params through the chunk seam so the backward pass
+            # hands each chunk group's cotangents over as one unit
+            def grad_loss(p, b):
+                leaves, ptd = jax.tree_util.tree_flatten(p)
+                return loss(jax.tree_util.tree_unflatten(
+                    ptd, list(seam(tuple(leaves)))), b)
+        (l, metrics), grads = jax.value_and_grad(grad_loss, has_aux=True)(
             params, batch)
         grads = constrain_params(grads, "model", msize)
 
@@ -153,7 +219,12 @@ def make_train_step(cfg, mesh, optimizer: Optimizer, lr_fn: Callable,
                           backend=backend, density_policy=density_policy,
                           adapt_state=state.get("adaptk"),
                           step=state["step"])
-            if layout is not None:
+            if chunk_plan is not None:
+                agg, nr, nr2, new_adapt, agg_metrics = \
+                    aggregate.aggregate_bucketed_chunked(
+                        grads, resid, layout, chunk_plan, spec,
+                        data_axes, "model", key, **agg_kw)
+            elif layout is not None:
                 agg, nr, nr2, new_adapt, agg_metrics = \
                     aggregate.aggregate_bucketed(
                         grads, resid, layout, spec, data_axes, "model",

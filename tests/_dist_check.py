@@ -521,6 +521,149 @@ def check_bucketed():
     print("BUCKETED OK")
 
 
+def check_chunked():
+    """Chunked bucket schedule (ISSUE 6) == unchunked bucketed BIT-exactly
+    on real meshes: the chunk plan only re-dispatches the wire over
+    leaf-aligned windows of the same flat buffer, so aggregate, both
+    residual levels and every metric except ``collectives_per_step``
+    must be bitwise identical at any chunk count — while the traced
+    jaxpr must show exactly N x the per-level collectives (the whole
+    point: N independently schedulable wire messages)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.adaptk import make_policy
+    from repro.dist import aggregate, compat
+    from repro.dist.layout import build_chunk_plan, build_layout
+    from repro.launch.hlo_cost import count_wire_collectives
+
+    params = {"a": jnp.zeros((33, 5)), "n": {"b": jnp.zeros((7,)),
+                                             "c": jnp.zeros((19, 3)),
+                                             "d": jnp.zeros((41,))},
+              "z": jnp.zeros((13, 2))}
+    L = len(jax.tree.leaves(params))
+    ratio = 0.05
+
+    def run_case(shape, axes_names, strategy, n_chunks, *, policy=None,
+                 with_r2=False, backend="reference", comp="topk",
+                 expect=None):
+        mesh = make_mesh(shape, axes_names)
+        msize = model_axis_size(mesh)
+        W = data_world_size(mesh)
+        data_axes = tuple(a for a in axes_names if a != "model")
+        joint = data_axes if len(data_axes) > 1 else data_axes[0]
+        spec = get_compressor(comp)
+        layout = build_layout(params, msize, ratio, spec,
+                              density_policy=policy)
+        plan = build_chunk_plan(layout, n_chunks)
+        N = plan.n_chunks          # may be clamped below n_chunks
+
+        key = jax.random.PRNGKey(1)
+        g_stack = jax.tree.map(
+            lambda p: 0.01 * jax.random.normal(
+                jax.random.fold_in(key, p.size), (W,) + p.shape), params)
+        e_flat = 1e-3 * jax.random.normal(
+            jax.random.fold_in(key, 2), (W, layout.flat_size))
+        r2_flat = 0.5 * e_flat if with_r2 else None
+        kw = dict(strategy=strategy, world=W, backend=backend,
+                  density_policy=policy,
+                  step=jnp.int32(0) if policy else None)
+
+        def unchunked(g, e, *r2s):
+            agg, ne, nr2, _, m = aggregate.aggregate_bucketed(
+                jax.tree.map(lambda x: x[0], g), e[0], layout, spec,
+                data_axes, "model", jax.random.PRNGKey(7),
+                resid2=r2s[0][0] if r2s else None, **kw)
+            out = (agg, ne[None], m)
+            return out + ((nr2[None],) if r2s else ())
+
+        def chunked(g, e, *r2s):
+            agg, ne, nr2, _, m = aggregate.aggregate_bucketed_chunked(
+                jax.tree.map(lambda x: x[0], g), e[0], layout, plan, spec,
+                data_axes, "model", jax.random.PRNGKey(7),
+                resid2=r2s[0][0] if r2s else None, **kw)
+            out = (agg, ne[None], m)
+            return out + ((nr2[None],) if r2s else ())
+
+        specs = dict(
+            in_specs=(P(joint),) * (2 + with_r2),
+            out_specs=(P(), P(joint), P()) + ((P(joint),) if with_r2
+                                              else ()))
+        sm1 = compat.shard_map(unchunked, mesh=mesh,
+                               axis_names=set(data_axes),
+                               check_vma=False, **specs)
+        sm2 = compat.shard_map(chunked, mesh=mesh,
+                               axis_names=set(data_axes),
+                               check_vma=False, **specs)
+        args = (g_stack, e_flat) + ((r2_flat,) if with_r2 else ())
+        out1 = jax.jit(sm1)(*args)
+        out2 = jax.jit(sm2)(*args)
+
+        for pa, pb in zip(jax.tree.leaves(out1[0]),
+                          jax.tree.leaves(out2[0])):
+            assert np.array_equal(np.asarray(pa), np.asarray(pb)), \
+                (shape, strategy, N, "agg")
+        assert np.array_equal(np.asarray(out1[1]), np.asarray(out2[1])), \
+            (shape, strategy, N, "resid")
+        if with_r2:
+            assert np.array_equal(np.asarray(out1[3]),
+                                  np.asarray(out2[3])), \
+                (shape, strategy, N, "resid2")
+        for mk in ("density", "density_cap", "comm_bits_sparse",
+                   "comm_bits_dense", "wire_bytes"):
+            assert float(out1[2][mk]) == float(out2[2][mk]), \
+                (shape, strategy, N, mk)
+        if policy is not None:
+            assert float(out1[2]["k_total"]) == float(out2[2]["k_total"])
+        # the ONE sanctioned metric difference: N x the wire messages
+        assert float(out2[2]["collectives_per_step"]) == \
+            N * float(out1[2]["collectives_per_step"]), \
+            (shape, strategy, N, out1[2]["collectives_per_step"],
+             out2[2]["collectives_per_step"])
+
+        # jaxpr structure: chunked == N x unchunked per wire primitive
+        c1 = count_wire_collectives(jax.make_jaxpr(sm1)(*args))
+        c2 = count_wire_collectives(jax.make_jaxpr(sm2)(*args))
+        for prim in ("all_gather", "ppermute"):
+            assert c2[prim] == N * c1[prim], (shape, strategy, N, prim,
+                                              c1, c2)
+        if expect is not None:
+            want_ag, want_pp = expect
+            assert (c2["all_gather"], c2["ppermute"]) == \
+                (want_ag * N, want_pp * N), (shape, strategy, N, c2)
+        print(f"  chunked N={N}(req {n_chunks}) {strategy} on {shape} "
+              f"policy={policy.policy if policy else 'fixed'} "
+              f"backend={backend}: bit-equal, collectives {c1} -> {c2}")
+
+    pol = make_policy("variance")
+    # (4,2): all strategies x {fixed, adaptive} x {reference, fused}
+    run_case((4, 2), ("data", "model"), "allgather", 2, expect=(2, 0))
+    run_case((4, 2), ("data", "model"), "allgather", 3, policy=pol,
+             expect=(2, 0))
+    run_case((4, 2), ("data", "model"), "gtopk", 2, expect=(0, 4))
+    run_case((4, 2), ("data", "model"), "gtopk", 2, policy=pol,
+             expect=(0, 4))
+    run_case((4, 2), ("data", "model"), "hierarchical", 2, with_r2=True,
+             expect=(2, 0))    # documented fallback to allgather
+    run_case((4, 2), ("data", "model"), "allgather", 2, comp="gaussiank",
+             backend="auto", expect=(2, 0))   # fused segmented kernels
+    run_case((4, 2), ("data", "model"), "allgather", 2, comp="gaussiank",
+             backend="auto", policy=pol,
+             expect=(2, 0))    # adaptive x fused: global pass-A barrier
+    # requesting more chunks than leaves clamps to L (= 5 segments)
+    run_case((4, 2), ("data", "model"), "allgather", 8, expect=(2, 0))
+    # (2,2,2): genuine two-level hierarchical + cross-axis gtopk
+    run_case((2, 2, 2), ("pod", "data", "model"), "hierarchical", 2,
+             with_r2=True, expect=(4, 0))
+    run_case((2, 2, 2), ("pod", "data", "model"), "hierarchical", 2,
+             with_r2=True, policy=pol, expect=(4, 0))
+    run_case((2, 2, 2), ("pod", "data", "model"), "hierarchical", 2,
+             with_r2=True, comp="gaussiank", backend="auto",
+             expect=(4, 0))
+    run_case((2, 2, 2), ("pod", "data", "model"), "gtopk", 2,
+             expect=(0, 4))
+    print("CHUNKED OK")
+
+
 def check_multipod():
     """Every compressor trains (loss decreases) on the 2x2x2 pod mesh;
     gaussiank additionally through every wire strategy (the gtopk rounds
@@ -551,4 +694,4 @@ def check_multipod():
 if __name__ == "__main__":
     {"eq2": check_eq2, "dense": check_dense, "gtopk": check_gtopk,
      "multipod": check_multipod, "adaptk": check_adaptk,
-     "bucketed": check_bucketed}[sys.argv[1]]()
+     "bucketed": check_bucketed, "chunked": check_chunked}[sys.argv[1]]()

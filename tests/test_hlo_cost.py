@@ -1,9 +1,14 @@
 """Validation of the trip-count-aware HLO cost analyzer against programs
-with known FLOP counts (the §Roofline input pipeline)."""
+with known FLOP counts (the §Roofline input pipeline), plus the chunked-
+schedule structure checks (ISSUE 6): jaxpr collective count x N under
+chunking, the backward-pass schedule seam, and the overlap cost model."""
+import pytest
+
 import jax
 import jax.numpy as jnp
 
-from repro.launch.hlo_cost import analyze
+from repro.launch.hlo_cost import (analyze, count_schedule_markers,
+                                   count_wire_collectives)
 
 
 def _flops(fn, *args):
@@ -75,3 +80,125 @@ def test_bytes_slicing_not_billed_full():
     r = _flops(f, jnp.zeros(()), big)
     # full-billing would be 64 iters x 256MB = 16GB
     assert r["bytes"] < 2e9, r["bytes"]
+
+
+# ---------------------------------------------------------------------------
+# chunked schedule structure (ISSUE 6) — jaxpr-level, AbstractMesh only
+# ---------------------------------------------------------------------------
+
+
+def _params(n_leaves):
+    return {f"p{i}": jnp.zeros((60 + 8 * i,)) for i in range(n_leaves)}
+
+
+def _trace_chunked(params, strategy, n_chunks, world=4):
+    from jax.sharding import AbstractMesh
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import get_compressor
+    from repro.dist import aggregate, compat
+    from repro.dist.layout import build_chunk_plan, build_layout
+
+    spec = get_compressor("topk")
+    layout = build_layout(params, 1, 0.05, spec)
+    plan = build_chunk_plan(layout, n_chunks)
+    grads = jax.tree.map(jnp.zeros_like, params)
+    flat = jnp.zeros((layout.flat_size,))
+    mesh = AbstractMesh((("data", world), ("model", 1)))
+
+    def body(g, e):
+        return aggregate.aggregate_bucketed_chunked(
+            g, e, layout, plan, spec, ("data",), "model",
+            jax.random.PRNGKey(0), strategy=strategy, world=world,
+            backend="reference")[0]
+
+    sm = compat.shard_map(body, mesh=mesh, in_specs=(P(), P()),
+                          out_specs=P(), axis_names={"data"},
+                          check_vma=False)
+    return count_wire_collectives(jax.make_jaxpr(sm)(grads, flat))
+
+
+@pytest.mark.parametrize("strategy,per_msg", [("allgather", (2, 0)),
+                                              ("gtopk", (0, 4))])
+def test_jaxpr_chunked_collectives_scale_with_n_not_leaves(strategy,
+                                                           per_msg):
+    """The ISSUE-6 acceptance check: N chunks -> exactly N x the
+    per-level wire collectives of the unchunked bucketed pipeline, for
+    ANY leaf count (6 vs 9 leaves trace to identical counts — the chunk
+    schedule re-dispatches the wire over windows, it never re-introduces
+    per-leaf messages)."""
+    ag1, pp1 = per_msg
+    for n_leaves in (6, 9):
+        base = _trace_chunked(_params(n_leaves), strategy, 1)
+        assert (base["all_gather"], base["ppermute"]) == (ag1, pp1), base
+        for n in (2, 3):
+            c = _trace_chunked(_params(n_leaves), strategy, n)
+            assert (c["all_gather"], c["ppermute"]) == \
+                (n * ag1, n * pp1), (n_leaves, n, c)
+
+
+def test_backward_seam_emits_one_barrier_per_chunk_group():
+    """The custom-vjp schedule seam: the backward pass must carry exactly
+    one optimization_barrier per chunk group (the anchor the XLA latency
+    scheduler can move collectives across), and the seam must be exact
+    identity for the gradients."""
+    from repro.core import get_compressor
+    from repro.dist.layout import build_chunk_plan, build_layout
+    from repro.train.step import _chunk_grad_seam
+
+    params = _params(5)
+    layout = build_layout(params, 1, 0.05, get_compressor("topk"))
+    leaves = [0.1 * jnp.arange(p.size, dtype=jnp.float32) + 1.0
+              for p in jax.tree.leaves(params)]
+
+    def loss_through(seam_fn, ls):
+        out = seam_fn(tuple(ls)) if seam_fn else tuple(ls)
+        return sum(jnp.sum(x ** 2) for x in out)
+
+    for n in (1, 3, 5):
+        plan = build_chunk_plan(layout, n)
+        seam = _chunk_grad_seam(plan.groups)
+        grad_fn = jax.grad(lambda ls: loss_through(seam, ls))
+        jaxpr = jax.make_jaxpr(grad_fn)(leaves)
+        assert count_schedule_markers(jaxpr) == plan.n_chunks
+        g_seam = grad_fn(leaves)
+        g_plain = jax.grad(lambda ls: loss_through(None, ls))(leaves)
+        for a, b in zip(g_seam, g_plain):
+            assert jnp.array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# overlap cost model (launch/roofline)
+# ---------------------------------------------------------------------------
+
+
+def test_overlapped_collective_time_properties():
+    from repro.launch.roofline import overlapped_collective_s
+
+    cases = [(3.0, 1.0), (1.0, 3.0), (2.0, 2.0), (0.0, 5.0), (4.0, 0.0)]
+    for c, w in cases:
+        serial = overlapped_collective_s(c, w, 1)
+        assert serial == c + w                       # N=1 == serial
+        prev = serial
+        for n in (2, 4, 8, 64):
+            t = overlapped_collective_s(c, w, n)
+            assert t <= prev + 1e-12, (c, w, n)      # monotone in N
+            assert t >= max(c, w) - 1e-12, (c, w, n)  # exposed phase floor
+            prev = t
+        # the hidden fraction approaches min/(c+w) as N -> inf
+        assert overlapped_collective_s(c, w, 10 ** 9) == \
+            pytest.approx(max(c, w))
+
+
+def test_overlap_report_prices_roofline():
+    from repro.launch.roofline import overlap_report, roofline_terms
+
+    r = roofline_terms(1e15, 1e12, 1e11, 1e15)
+    rep = overlap_report(r, 4)
+    compute = max(r.compute_s, r.memory_s)
+    assert rep["serial_s"] == pytest.approx(compute + r.collective_s)
+    assert rep["overlapped_s"] == pytest.approx(
+        max(compute, r.collective_s)
+        + min(compute, r.collective_s) / 4)
+    assert 0.0 <= rep["hidden_frac"] < 1.0
+    assert overlap_report(r, 1)["hidden_frac"] == 0.0

@@ -16,10 +16,11 @@ from jax.sharding import PartitionSpec as P
 from repro.core import codec, get_compressor
 from repro.core.adaptk import make_policy
 from repro.dist import aggregate, compat
-from repro.dist.layout import (build_layout, collective_count, flat_dims,
-                               leaf_key_salt, pack_grads,
-                               pack_residual_arrays, unpack_residual_arrays,
-                               unpack_tree)
+from repro.dist.layout import (build_chunk_plan, build_layout, chunk_view,
+                               collective_count, flat_dims, leaf_key_salt,
+                               pack_grads, pack_residual_arrays,
+                               unpack_residual_arrays, unpack_tree,
+                               validate_chunk_plan)
 from repro.launch.hlo_cost import count_wire_collectives
 
 MSIZE, RATIO = 2, 0.05
@@ -110,6 +111,85 @@ def test_layout_validation_errors():
             _grads(_params()), jnp.zeros((layout.flat_size,)), layout,
             spec, ("data",), "model", jax.random.PRNGKey(0),
             density_policy=make_policy("variance"))
+
+
+# ---------------------------------------------------------------------------
+# chunk plan geometry (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+
+def test_chunk_plan_tiles_layout_exactly():
+    spec = get_compressor("topk")
+    layout = build_layout(_params(extra=True), MSIZE, RATIO, spec)
+    n_segs = len(layout.segments)
+    for n in range(1, n_segs + 3):       # over-request clamps to n_segs
+        plan = build_chunk_plan(layout, n)
+        assert plan.requested == n
+        assert plan.n_chunks == min(n, n_segs)
+        assert plan.n_chunks == len(plan.groups)
+        validate_chunk_plan(layout, plan)    # contiguous leaf-aligned tiling
+        seg = row = cap = 0
+        for i, grp in enumerate(plan.groups):
+            assert grp.index == i
+            assert grp.seg_lo == seg and grp.row_off == row \
+                and grp.cap_off == cap
+            assert grp.seg_hi > grp.seg_lo   # never an empty group
+            seg, row, cap = (grp.seg_hi, row + grp.d_row,
+                             cap + grp.k_cap)
+        assert seg == n_segs
+        assert row == layout.d_row_total and cap == layout.k_cap_total
+
+
+def test_chunk_plan_balances_rows():
+    """The greedy cut must not produce a degenerate split: with equal
+    leaves every group's row span stays within one leaf of d_row/N."""
+    spec = get_compressor("topk")
+    params = {f"p{i}": jnp.zeros((64,)) for i in range(8)}
+    layout = build_layout(params, 1, RATIO, spec)
+    for n in (2, 4):
+        plan = build_chunk_plan(layout, n)
+        for grp in plan.groups:
+            assert grp.d_row == layout.d_row_total // n
+
+
+def test_chunk_view_is_rebased_sublayout():
+    spec = get_compressor("topk")
+    layout = build_layout(_params(), MSIZE, RATIO, spec)
+    plan = build_chunk_plan(layout, 2)
+    seen = []
+    for grp in plan.groups:
+        view = chunk_view(layout, grp)
+        assert view.d_row_total == grp.d_row
+        assert view.k_cap_total == grp.k_cap
+        assert view.flat_size == MSIZE * grp.d_row
+        assert len(view.segments) == grp.seg_hi - grp.seg_lo
+        for sub, orig in zip(view.segments,
+                             layout.segments[grp.seg_lo:grp.seg_hi]):
+            # window-local offsets, but identical identity: the RNG salt
+            # and selection plan must be untouched so per-chunk
+            # compression is bit-identical to the unchunked pass
+            assert sub.row_off == orig.row_off - grp.row_off
+            assert sub.cap_off == orig.cap_off - grp.cap_off
+            assert (sub.name, sub.salt) == (orig.name, orig.salt)
+            assert (sub.k_row, sub.k_cap) == (orig.k_row, orig.k_cap)
+            seen.append(sub.name)
+    assert seen == [s.name for s in layout.segments]
+
+
+def test_chunk_plan_validation_errors():
+    spec = get_compressor("topk")
+    layout = build_layout(_params(), MSIZE, RATIO, spec)
+    with pytest.raises(ValueError):
+        build_chunk_plan(layout, 0)
+    plan = build_chunk_plan(layout, 2)
+    with pytest.raises(ValueError):   # plan from a different layout
+        other = build_layout(_params(extra=True), MSIZE, RATIO, spec)
+        validate_chunk_plan(other, plan)
+    with pytest.raises(ValueError):   # chunked agg rejects a stale plan
+        aggregate.aggregate_bucketed_chunked(
+            _grads(_params(extra=True)),
+            jnp.zeros((other.flat_size,)), other, plan, spec,
+            ("data",), "model", jax.random.PRNGKey(0))
 
 
 # ---------------------------------------------------------------------------
@@ -521,6 +601,63 @@ def test_train_step_bucketed_matches_per_leaf():
                      jax.tree.leaves(runs["perleaf"][0]["resid"])]),
         np.asarray(runs["bucketed"][0]["resid"])[0])
     assert float(runs["bucketed"][1]["collectives_per_step"]) == 1.0
+
+
+def test_train_step_chunked_matches_unchunked():
+    """--chunks N on the single-device mesh: bit-identical params and
+    residuals to chunks=1 over 3 steps, with collectives_per_step = N
+    (the multi-shard bit-identity lives in tests/_dist_check.py
+    ``chunked``)."""
+    from repro.optim import constant, sgd_momentum
+    from repro.train import init_train_state, make_train_step
+
+    spec = get_compressor("topk")
+    params = _grads(_params(), seed=4)   # nonzero params: real gradients,
+    layout = build_layout(params, 1, RATIO, spec)   # non-degenerate top-k
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    opt = sgd_momentum(0.9)
+
+    def loss_fn(p, b):
+        l = sum(jnp.sum((leaf * b["x"][0, 0]) ** 2)
+                for leaf in jax.tree.leaves(p))
+        return l, {"loss": l}
+
+    batch = {"x": jnp.ones((1, 1))}
+    runs = {}
+    for n in (1, 3):
+        state = init_train_state(params, opt, workers=1, model_size=1,
+                                 layout=layout)
+        step = make_train_step(None, mesh, opt, constant(0.1),
+                               compressor="topk", ratio=RATIO,
+                               loss_fn=loss_fn, layout=layout, chunks=n)
+        for _ in range(3):
+            state, m = step(state, batch)
+        assert float(m["collectives_per_step"]) == float(n)
+        runs[n] = state
+    for a, b in zip(jax.tree.leaves(runs[1]["params"]),
+                    jax.tree.leaves(runs[3]["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(runs[1]["resid"]),
+                                  np.asarray(runs[3]["resid"]))
+
+
+def test_train_step_chunked_needs_bucketed_pipeline():
+    from repro.optim import constant, sgd_momentum
+    from repro.train import make_train_step
+
+    params = _params()
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    opt = sgd_momentum(0.9)
+    layout = build_layout(params, 1, RATIO, get_compressor("topk"))
+    with pytest.raises(ValueError):   # chunks without a layout
+        make_train_step(None, mesh, opt, constant(0.1), compressor="topk",
+                        ratio=RATIO, chunks=2)
+    with pytest.raises(ValueError):   # chunks on the dense path
+        make_train_step(None, mesh, opt, constant(0.1), compressor="none",
+                        chunks=2)
+    with pytest.raises(ValueError):   # nonsensical chunk count
+        make_train_step(None, mesh, opt, constant(0.1), compressor="topk",
+                        ratio=RATIO, layout=layout, chunks=0)
 
 
 def test_train_step_layout_mismatch_fails_loudly():

@@ -1,0 +1,79 @@
+#!/usr/bin/env python
+"""CI workflow hygiene audit (stdlib only — no pyyaml in the image).
+
+Two invariants over ``.github/workflows/*.yml``:
+
+1. every job carries an explicit ``timeout-minutes`` budget (a job
+   without one inherits the 6-hour GitHub default and can burn a runner
+   for hours on a hang);
+2. no job inlines ``pip install -e`` — the editable install (and its
+   pip/JAX-wheel cache policy) lives in ONE place, the
+   ``.github/actions/setup-repro`` composite action, so install drift
+   between jobs is structurally impossible.
+
+The parser is deliberately dumb: jobs are the 2-space-indented keys of
+the ``jobs:`` block.  It fails loudly when it finds no jobs at all, so
+an indentation restyle breaks the audit rather than silently passing.
+
+Usage: python tools/check_ci.py [workflow.yml ...]
+       (default: .github/workflows/ci.yml)
+"""
+from __future__ import annotations
+
+import re
+import sys
+
+
+def parse_jobs(text: str) -> dict:
+    """{job_name: [body lines]} of the top-level ``jobs:`` block."""
+    jobs, current, in_jobs = {}, None, False
+    for ln in text.splitlines():
+        if re.match(r"^jobs:\s*(#.*)?$", ln):
+            in_jobs, current = True, None
+            continue
+        if not in_jobs:
+            continue
+        if re.match(r"^\S", ln):     # dedent back to top level
+            in_jobs, current = False, None
+            continue
+        m = re.match(r"^  ([A-Za-z_][\w-]*):\s*(#.*)?$", ln)
+        if m:
+            current = m.group(1)
+            jobs[current] = []
+        elif current is not None:
+            jobs[current].append(ln)
+    return jobs
+
+
+def audit(path: str) -> list:
+    with open(path) as f:
+        text = f.read()
+    jobs = parse_jobs(text)
+    if not jobs:
+        return [f"{path}: no jobs found under 'jobs:' (parser drift or "
+                "empty workflow — both are audit failures)"]
+    errors = []
+    for name, body in jobs.items():
+        if not any("timeout-minutes:" in ln for ln in body):
+            errors.append(f"{path}: job {name!r} has no explicit "
+                          "timeout-minutes budget")
+        if any("pip install -e" in ln for ln in body):
+            errors.append(
+                f"{path}: job {name!r} inlines the editable install — "
+                "use the .github/actions/setup-repro composite action")
+    return errors
+
+
+def main(argv=None) -> int:
+    paths = (argv if argv is not None else sys.argv[1:]) or [
+        ".github/workflows/ci.yml"]
+    errors = [e for p in paths for e in audit(p)]
+    for e in errors:
+        print(f"CI AUDIT FAIL: {e}")
+    if not errors:
+        print(f"ci audit ok ({', '.join(paths)})")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -33,6 +33,24 @@ adaptk (``BENCH_adaptk.json``, gated when ``--adaptk-measured`` /
   against the committed baseline;
 * every baseline policy is still measured.
 
+overlap (``BENCH_overlap.json``, schema ``overlap/v1``, gated when
+``--overlap-measured`` / ``--overlap-baseline`` are passed) — the
+chunked-schedule gate (DESIGN.md §11):
+
+* structural, within the measured file: for every shape, the
+  ``dispatch-chunked{N}`` jaxpr collective count must equal exactly
+  ``N x`` the ``dispatch-chunked1`` count (N all-gathers for allgather,
+  2N for hierarchical, N·log2(W) gTop-k rounds) — any other number
+  means the schedule silently de-chunked or double-dispatched;
+* wall, within the measured file: ``step-chunked`` must not exceed
+  ``step-unchunked`` by more than ``--overlap-tol`` (chunking must stay
+  free where it cannot win — CPU has no async collectives, so the CI
+  check is no-regression, not speedup);
+* baseline pin: every baseline row must still be measured, and
+  dispatch counts must match the committed baseline EXACTLY.  Wall
+  times are NOT compared across machines — the chunked/unchunked ratio
+  within one run is the machine-independent invariant.
+
 ``--update`` rewrites the baseline(s) from the measured file(s) instead
 of checking (run on the reference machine, commit the result).
 
@@ -150,6 +168,76 @@ def check_dispatch(measured: dict, baseline: dict) -> list:
     return errors
 
 
+OVERLAP_SCHEMA = "overlap/v1"
+
+
+def load_overlap(path: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    if data.get("schema") != OVERLAP_SCHEMA:
+        raise SystemExit(f"{path}: unexpected schema "
+                         f"{data.get('schema')!r} (want "
+                         f"{OVERLAP_SCHEMA!r})")
+    return {(r["shape"], r["method"]): r for r in data["rows"]}
+
+
+def check_overlap(measured: dict, baseline: dict, tol: float) -> list:
+    """Gate the chunked overlapped schedule (module docstring): the
+    xN dispatch law and the chunked-vs-unchunked wall ratio are checked
+    within the measured file; dispatch counts are additionally pinned to
+    the committed baseline exactly."""
+    errors = []
+    # 1. dispatch law: messages(chunked N) == N x messages(chunked 1)
+    by_shape = {}
+    for (shape, method), row in measured.items():
+        if method.startswith("dispatch-chunked"):
+            by_shape.setdefault(shape, {})[
+                int(method[len("dispatch-chunked"):])] = row["passes"]
+    if not by_shape:
+        errors.append("overlap: no dispatch-chunked rows in measured file")
+    for shape, counts in sorted(by_shape.items()):
+        base_n = counts.get(1)
+        if base_n is None:
+            errors.append(f"overlap@{shape}: no dispatch-chunked1 row to "
+                          "anchor the xN law")
+            continue
+        for n, msgs in sorted(counts.items()):
+            if msgs != n * base_n:
+                errors.append(
+                    f"overlap@{shape}: chunked{n} dispatches {msgs} "
+                    f"collectives, want {n} x {base_n} — the chunk "
+                    "schedule de-chunked or double-dispatched")
+    # 2. wall: chunked <= unchunked * (1 + tol) on this runner
+    step_rows = [key for key in measured if key[1] == "step-chunked"]
+    if not step_rows:
+        errors.append("overlap: no step-chunked rows in measured file")
+    for shape, method in step_rows:
+        twin = (shape, "step-unchunked")
+        if twin not in measured:
+            errors.append(f"overlap@{shape}: no step-unchunked twin row")
+            continue
+        c, u = measured[(shape, method)], measured[twin]
+        if u["ms"] > 0 and c["ms"] > u["ms"] * (1.0 + tol):
+            errors.append(
+                f"overlap@{shape}: chunked step {c['ms']}ms > "
+                f"{1.0 + tol:.2f}x unchunked {u['ms']}ms — the overlap "
+                "regressed to slower-than-sequential")
+    # 3. committed baseline: row presence + exact dispatch pins
+    for key, base in baseline.items():
+        got = measured.get(key)
+        if got is None:
+            errors.append(f"overlap {key[1]}@{key[0]}: missing from "
+                          "measured file")
+        elif (key[1].startswith("dispatch-")
+              and got["passes"] != base["passes"]):
+            errors.append(
+                f"overlap {key[1]}@{key[0]}: collectives "
+                f"{got['passes']} != baseline {base['passes']} (chunk "
+                "dispatch is deterministic — drift means the schedule "
+                "changed)")
+    return errors
+
+
 def load_adaptk(path: str) -> dict:
     with open(path) as f:
         data = json.load(f)
@@ -212,12 +300,24 @@ def main(argv=None) -> int:
                          "adaptk gate)")
     ap.add_argument("--adaptk-baseline", default="",
                     help="committed benchmarks/baselines/adaptk.json")
+    ap.add_argument("--overlap-measured", default="",
+                    help="freshly emitted BENCH_overlap.json (enables "
+                         "the chunked-schedule gate)")
+    ap.add_argument("--overlap-baseline", default="",
+                    help="committed benchmarks/baselines/overlap.json")
+    ap.add_argument("--overlap-tol", type=float, default=0.25,
+                    help="allowed chunked-vs-unchunked step wall-time "
+                         "overhead (CPU runners are noisy; the dispatch "
+                         "pins stay exact regardless)")
     ap.add_argument("--update", action="store_true",
                     help="rewrite the baseline(s) from the measured file(s)")
     args = ap.parse_args(argv)
 
     if bool(args.adaptk_measured) != bool(args.adaptk_baseline):
         raise SystemExit("--adaptk-measured and --adaptk-baseline go "
+                         "together")
+    if bool(args.overlap_measured) != bool(args.overlap_baseline):
+        raise SystemExit("--overlap-measured and --overlap-baseline go "
                          "together")
 
     if args.update:
@@ -228,6 +328,10 @@ def main(argv=None) -> int:
             load_adaptk(args.adaptk_measured)
             shutil.copyfile(args.adaptk_measured, args.adaptk_baseline)
             print(f"baseline updated: {args.adaptk_baseline}")
+        if args.overlap_measured:
+            load_overlap(args.overlap_measured)
+            shutil.copyfile(args.overlap_measured, args.overlap_baseline)
+            print(f"baseline updated: {args.overlap_baseline}")
         return 0
 
     errors = check(load(args.measured), load(args.baseline),
@@ -235,6 +339,10 @@ def main(argv=None) -> int:
     if args.adaptk_measured:
         errors += check_adaptk(load_adaptk(args.adaptk_measured),
                                load_adaptk(args.adaptk_baseline))
+    if args.overlap_measured:
+        errors += check_overlap(load_overlap(args.overlap_measured),
+                                load_overlap(args.overlap_baseline),
+                                args.overlap_tol)
     for e in errors:
         print(f"PERF FAIL: {e}")
     if not errors:
