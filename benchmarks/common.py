@@ -37,7 +37,10 @@ def simulate_sparsified_sgd(compressor: str, *, workers=16, ratio=0.001,
     (``core.adaptk.DensityPolicy``) switches the per-leaf budgets to the
     adaptive controller, mirroring the mesh path: worker-mean signal,
     budget-exact allocation, traced per-step ``k`` against the static
-    ceiling capacity.
+    ceiling capacity.  A ``global_policy`` beyond ``"none"`` also
+    mirrors the convergence-aware global-k controller: the worker-mean
+    total second moment feeds ``adaptk.global_scale`` and the scaled
+    budget replaces ``K_total`` before allocation.
     """
     from repro.core import adaptk
     from repro.data import mnist_like
@@ -94,6 +97,9 @@ def simulate_sparsified_sgd(compressor: str, *, workers=16, ratio=0.001,
         hi_v = [bounds[li][1] for li in range(len(dims))]
         alloc_fn = jax.jit(lambda K, w: adaptk.allocate(K, w, lo_v, hi_v))
     ema_sig = None
+    gstate = None
+    if adaptive and density_policy.global_policy != "none":
+        gstate = adaptk.init_controller_state(len(dims), global_k=True)
     losses, accs, comm, hists = [], [], [], {}
     for t in range(steps):
         # phase 1: per-worker grads and accumulated u (residual folded in)
@@ -129,6 +135,14 @@ def simulate_sparsified_sgd(compressor: str, *, workers=16, ratio=0.001,
                          + (1.0 - density_policy.ema) * fresh)
             ema_sig = fresh
             K = adaptk.budget(dims, ratio, density_policy, t)
+            if gstate is not None:
+                # worker-mean total second moment == the pmean'd extra
+                # lane the mesh path rides on the allocation collective
+                sq_tot = stats[:, :, 1].mean(axis=0).sum()
+                scale, upd = adaptk.global_scale(gstate, sq_tot,
+                                                 density_policy)
+                gstate = {**gstate, **upd}
+                K = adaptk.scale_budget(K, scale)
             k_alloc, _ = alloc_fn(K, fresh)
         # phase 3: compress, update residuals, aggregate
         gsum = [jnp.zeros((d,)) for d in dims]

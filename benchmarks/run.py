@@ -17,8 +17,8 @@ import sys
 import time
 
 MODULES = ["fig5_bound", "fig2_histograms", "fig1_fig6_convergence",
-           "fig4_selection_speed", "fig10_sensitivity", "table2_scaling",
-           "overlap_schedule"]
+           "fig4_selection_speed", "fig10_sensitivity", "fig_rtopk",
+           "table2_scaling", "overlap_schedule"]
 
 
 def run_module(name: str, smoke: bool = False) -> int:

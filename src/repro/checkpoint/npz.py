@@ -23,6 +23,12 @@ _SEP = "/"
 # TrainState keys whose per-leaf legacy form migrates into a flat bucket
 _BUCKET_KEYS = ("resid", "resid2")
 
+# global-k controller scalars (DESIGN.md §12) absent from checkpoints
+# written before the controller existed: zero-filled on load — they
+# self-seed from the first positive observation (core/adaptk.py
+# ``global_scale``), so the migrated state is exact after one step
+_GLOBALK_KEYS = ("adaptk/gnorm", "adaptk/gnorm0")
+
 
 def _flatten(tree) -> dict:
     flat = {}
@@ -83,6 +89,8 @@ def load_state(path: str, like: Any, *, layout: Optional[Any] = None) -> Any:
             str(getattr(e, "key", getattr(e, "idx", e))) for e in path_)
         if key not in flat and layout is not None and key in _BUCKET_KEYS:
             arr = _migrate_legacy_residual(flat, key, leaf, layout)
+        elif key not in flat and key in _GLOBALK_KEYS:
+            arr = np.zeros(leaf.shape, leaf.dtype)
         else:
             arr = flat[key]
         assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)

@@ -29,15 +29,25 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import codec
-from repro.core.compressors import CompressorSpec, gaussian_threshold
+from repro.core.compressors import (CompressorSpec, _strided_sample,
+                                    gaussian_threshold, rtopk_sample_size)
 
 POLICIES = ("uniform", "variance", "absmax")
 
+# global-budget controllers (DESIGN.md §12): "none" keeps K_total at the
+# configured ratio x warmup schedule; "normdecay" (Adaptive Top-K, Ruan
+# et al. 2022) additionally scales it by the estimated gradient-norm
+# decay — an EMA of the pmean'd pass-A second moment over its frozen
+# first observation.
+GLOBALK_POLICIES = ("none", "normdecay")
+
 # compressors with a dynamic-k (traced per-step budget) selection path:
 # threshold-style rules take k as a plain scalar in the threshold math;
-# topk/randk rank at the static capacity and mask ranks >= k.  dgck and
-# trimmedk bake k into static candidate/sample shapes and stay fixed-k.
-DYNAMIC_COMPRESSORS = ("topk", "randk", "gaussiank", "gaussiank2", "histk")
+# topk/randk/rtopk rank at the static capacity and mask ranks >= k.
+# dgck and trimmedk bake k into static candidate/sample shapes and stay
+# fixed-k.
+DYNAMIC_COMPRESSORS = ("topk", "randk", "rtopk", "gaussiank", "gaussiank2",
+                       "histk")
 
 
 class DensityPolicy(NamedTuple):
@@ -58,6 +68,13 @@ class DensityPolicy(NamedTuple):
                      warmup: the global budget starts at
                      ``warmup_mult × K_total`` and decays geometrically
                      to ``1×`` over ``warmup_steps`` steps.
+    ``global_policy``/``global_ema``/``global_floor``  convergence-aware
+                     global-k controller (:func:`global_scale`,
+                     DESIGN.md §12): ``"normdecay"`` scales ``K_total``
+                     by ``clip(sqrt(EMA[Σu²] / Σu²_first),
+                     global_floor, 1)``.  The scale never exceeds 1, so
+                     the ceiling clamp (and with it every static codec
+                     capacity) is untouched.
     """
     policy: str = "variance"
     floor_mult: float = 0.25
@@ -65,6 +82,9 @@ class DensityPolicy(NamedTuple):
     ema: float = 0.0
     warmup_steps: int = 0
     warmup_mult: float = 1.0
+    global_policy: str = "none"
+    global_ema: float = 0.9
+    global_floor: float = 0.25
 
     @property
     def cap_mult(self) -> float:
@@ -76,7 +96,10 @@ class DensityPolicy(NamedTuple):
 def make_policy(policy: str = "variance", *, floor_mult: float = 0.25,
                 ceil_mult: float = 4.0, ema: float = 0.0,
                 warmup_steps: int = 0,
-                warmup_mult: float = 1.0) -> DensityPolicy:
+                warmup_mult: float = 1.0,
+                global_policy: str = "none",
+                global_ema: float = 0.9,
+                global_floor: float = 0.25) -> DensityPolicy:
     """Validated :class:`DensityPolicy` constructor."""
     if policy not in POLICIES:
         raise ValueError(f"unknown density policy {policy!r}; have {POLICIES}")
@@ -89,8 +112,18 @@ def make_policy(policy: str = "variance", *, floor_mult: float = 0.25,
     if warmup_steps < 0 or warmup_mult < 1.0:
         raise ValueError("warmup_steps must be >= 0 and warmup_mult >= 1, "
                          f"got {warmup_steps}, {warmup_mult}")
+    if global_policy not in GLOBALK_POLICIES:
+        raise ValueError(f"unknown global-k policy {global_policy!r}; "
+                         f"have {GLOBALK_POLICIES}")
+    if not 0.0 <= global_ema < 1.0:
+        raise ValueError(f"global_ema must be in [0, 1), got {global_ema}")
+    if not 0.0 < global_floor <= 1.0:
+        raise ValueError(f"global_floor must be in (0, 1], got "
+                         f"{global_floor}")
     return DensityPolicy(policy, float(floor_mult), float(ceil_mult),
-                         float(ema), int(warmup_steps), float(warmup_mult))
+                         float(ema), int(warmup_steps), float(warmup_mult),
+                         global_policy, float(global_ema),
+                         float(global_floor))
 
 
 def supports_dynamic(spec: CompressorSpec) -> bool:
@@ -166,11 +199,22 @@ def leaf_signal(policy_name: str, d: int, s, sq, mx) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
-def init_controller_state(n_leaves: int) -> dict:
+def init_controller_state(n_leaves: int, global_k: bool = False) -> dict:
     """Zero EMA state: ``signal`` is the smoothed per-leaf weight vector,
-    ``count`` gates the cold start (first step uses the fresh signal)."""
-    return {"signal": jnp.zeros((n_leaves,), jnp.float32),
-            "count": jnp.zeros((), jnp.int32)}
+    ``count`` gates the cold start (first step uses the fresh signal).
+
+    ``global_k`` additionally allocates the :func:`global_scale`
+    controller scalars: ``gnorm`` (the EMA'd total second moment) and
+    ``gnorm0`` (its frozen first observation, the norm-decay reference).
+    Both self-seed from their first positive observation, so zero-filled
+    state — fresh or migrated from a pre-globalk checkpoint — is exact.
+    """
+    state = {"signal": jnp.zeros((n_leaves,), jnp.float32),
+             "count": jnp.zeros((), jnp.int32)}
+    if global_k:
+        state["gnorm"] = jnp.zeros((), jnp.float32)
+        state["gnorm0"] = jnp.zeros((), jnp.float32)
+    return state
 
 
 def blend_signal(state: Optional[dict], fresh: jax.Array, ema: float):
@@ -178,6 +222,8 @@ def blend_signal(state: Optional[dict], fresh: jax.Array, ema: float):
 
     ``state=None`` runs stateless (fresh signal, no new state).  With a
     state, the first observation seeds the EMA (no zero-init bias).
+    Keys beyond ``signal``/``count`` (the :func:`global_scale` scalars)
+    pass through untouched for their own update.
     """
     if state is None:
         return fresh, None
@@ -188,7 +234,56 @@ def blend_signal(state: Optional[dict], fresh: jax.Array, ema: float):
                             fresh)
     else:
         blended = fresh
-    return blended, {"signal": blended, "count": state["count"] + 1}
+    return blended, {**state, "signal": blended,
+                     "count": state["count"] + 1}
+
+
+# ---------------------------------------------------------------------------
+# convergence-aware global-k controller (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+
+def global_scale(state: Optional[dict], sq_total, policy: DensityPolicy):
+    """Global-budget scale from the estimated gradient-norm decay.
+
+    ``sq_total`` is the pmean'd total pass-A second moment ``Σ u²``
+    across all leaves — the squared gradient-norm estimate the fused
+    pipeline already streams.  The ``"normdecay"`` controller (Adaptive
+    Top-K, Ruan et al. 2022) EMAs it (``global_ema``), freezes the first
+    observation as the reference, and returns
+
+        ``scale = clip(sqrt(EMA[Σu²] / Σu²_first), global_floor, 1)``
+
+    — as the norm decays toward convergence, fewer coordinates carry the
+    gradient's mass and the global element budget shrinks with it.  The
+    scale never exceeds 1, so every static shape sized from the ceiling
+    clamp stays valid.  Returns ``(scale, state_updates)``; merge the
+    updates into the controller state (the caller owns the dict).  Both
+    scalars self-seed from the first positive observation, which also
+    makes zero-filled legacy-checkpoint state exact.
+    """
+    if policy.global_policy == "none":
+        return jnp.float32(1.0), {}
+    if state is None or "gnorm" not in state:
+        raise ValueError(
+            f"global-k policy {policy.global_policy!r} is stateful; "
+            "allocate the controller scalars via "
+            "init_controller_state(n, global_k=True) (init_train_state "
+            "does this when density_policy.global_policy is set)")
+    n = jnp.maximum(jnp.asarray(sq_total, jnp.float32), 0.0)
+    sm = jnp.where(state["gnorm"] > 0.0,
+                   policy.global_ema * state["gnorm"]
+                   + (1.0 - policy.global_ema) * n,
+                   n)
+    ref = jnp.where(state["gnorm0"] > 0.0, state["gnorm0"], n)
+    ratio = jnp.where(ref > 0.0, sm / ref, 1.0)
+    scale = jnp.clip(jnp.sqrt(ratio), policy.global_floor, 1.0)
+    return scale, {"gnorm": sm, "gnorm0": ref}
+
+
+def scale_budget(K, scale):
+    """Apply a :func:`global_scale` factor to an int32 element budget."""
+    return jnp.round(K.astype(jnp.float32) * scale).astype(jnp.int32)
 
 
 # ---------------------------------------------------------------------------
@@ -284,8 +379,12 @@ def select_dynamic(spec: CompressorSpec, u: jax.Array, k, k_cap: int,
     name = spec.name
     if name not in DYNAMIC_COMPRESSORS:
         raise ValueError(
-            f"compressor {name!r} has no dynamic-k path; adaptive density "
-            f"policies support {DYNAMIC_COMPRESSORS}")
+            f"compressor {name!r} bakes its per-step budget k into static "
+            f"sample/candidate shapes, so it has no dynamic-k (traced "
+            f"budget) path; adaptive density policies support "
+            f"{DYNAMIC_COMPRESSORS}.  Run {name!r} fixed-k instead: drop "
+            f"--density-policy on the CLI (density_policy=None in "
+            f"aggregate_compressed / make_train_step).")
     d = u.shape[0]
     k_cap = min(k_cap, d)
     if name in ("topk", "randk"):
@@ -296,6 +395,17 @@ def select_dynamic(spec: CompressorSpec, u: jax.Array, k, k_cap: int,
         keep = jnp.arange(k_cap, dtype=jnp.int32) < k
         values = jnp.where(keep, u[idx], jnp.zeros((), u.dtype))
         indices = jnp.where(keep, idx, codec.SENTINEL)
+        return values, indices
+    if name == "rtopk":
+        # static sample geometry from the capacity (= the allocator's
+        # ceiling), in-sample rank at k_cap, sentinel out ranks >= k
+        r = rtopk_sample_size(k_cap, d)
+        sidx = _strided_sample(key, d, r).astype(jnp.int32)
+        svals = u[sidx]
+        _, sel = jax.lax.top_k(jnp.abs(svals), k_cap)
+        keep = jnp.arange(k_cap, dtype=jnp.int32) < k
+        values = jnp.where(keep, svals[sel], jnp.zeros((), u.dtype))
+        indices = jnp.where(keep, sidx[sel], codec.SENTINEL)
         return values, indices
     if name in ("gaussiank", "gaussiank2"):
         thres = gaussian_threshold(u, k, two_sided=(name == "gaussiank2"))

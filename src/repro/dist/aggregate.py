@@ -522,8 +522,11 @@ def _wire_config(strategy: str, hierarchical: bool, axes, resid2, world: int,
                          "disable it or density_policy")
     if adaptive and not adaptk.supports_dynamic(spec):
         raise ValueError(
-            f"compressor {spec.name!r} has no dynamic-k path; adaptive "
-            f"density supports {adaptk.DYNAMIC_COMPRESSORS}")
+            f"compressor {spec.name!r} bakes its per-step budget k into "
+            f"static sample/candidate shapes, so it has no dynamic-k path; "
+            f"adaptive density supports {adaptk.DYNAMIC_COMPRESSORS}.  Run "
+            f"{spec.name!r} fixed-k instead: drop --density-policy on the "
+            f"CLI (density_policy=None here)")
     # without a second residual the two-level path cannot run; fall back
     # to the flat gather over ALL data axes rather than silently dropping
     # the outer (pod) contribution
@@ -557,6 +560,41 @@ def _wire_config(strategy: str, hierarchical: bool, axes, resid2, world: int,
         n_pods, n_inner = 1, world
     return strategy, hier, gtopk, outer_axis, inner_axes, n_pods, n_inner, \
         world
+
+
+def _adaptive_allocation(adapt_state, sigs, sqs, dims, ratio, policy, step,
+                         lo, hi, axes):
+    """Phase 2 of the adaptive path — ONE implementation shared by all
+    three dispatch granularities: pmean the stacked per-leaf signal over
+    the data axes (one identical allocation on every worker), EMA-blend,
+    derive the global budget (× DGC warmup, × the global-k controller's
+    norm-decay scale when enabled — DESIGN.md §12) and split it
+    budget-exactly.
+
+    The controller's Σu² observation rides the SAME pmean as one extra
+    lane appended to the stacked signal — pmean is elementwise, so the
+    existing lanes (and with them every non-globalk jaxpr and its CI
+    dispatch-count pins) are bit-untouched, and the controller costs no
+    extra collective.  Returns ``(k_alloc, K_eff, new_adapt_state)``.
+    """
+    globalk = policy.global_policy != "none"
+    stack = jnp.stack(sigs)
+    if globalk:
+        sq_tot = jnp.asarray(sum(sqs), jnp.float32).reshape(1)
+        stack = jnp.concatenate([stack, sq_tot])
+    red = jax.lax.pmean(stack, axes)
+    signal = red[:-1] if globalk else red
+    signal, new_adapt = adaptk.blend_signal(adapt_state, signal, policy.ema)
+    K = adaptk.budget(dims, ratio, policy, step)
+    if globalk:
+        scale, upd = adaptk.global_scale(
+            new_adapt if new_adapt is not None else adapt_state,
+            red[-1], policy)
+        K = adaptk.scale_budget(K, scale)
+        if new_adapt is not None:
+            new_adapt = {**new_adapt, **upd}
+    k_alloc, K_eff = adaptk.allocate(K, signal, lo, hi)
+    return k_alloc, K_eff, new_adapt
 
 
 def aggregate_compressed(grads, resid, spec: CompressorSpec, ratio: float,
@@ -625,7 +663,7 @@ def aggregate_compressed(grads, resid, spec: CompressorSpec, ratio: float,
     plans, g_flats, leaf_row_stats = {}, {}, {}
     if adaptive:
         fusedp = resolve_backend(backend, spec)
-        sigs = []
+        sigs, sqs = [], []
         for li, (g, e) in enumerate(zip(g_leaves, e_leaves)):
             plan = leaf_plan_adaptive(g.size, model_size, ratio, spec,
                                       density_policy)
@@ -637,16 +675,14 @@ def aggregate_compressed(grads, resid, spec: CompressorSpec, ratio: float,
                 e.reshape(model_size, d_row), spec.name, fusedp)
             sigs.append(adaptk.leaf_signal(density_policy.policy, g.size,
                                            s, sq, mx))
+            sqs.append(sq)
             plans[li], g_flats[li], leaf_row_stats[li] = plan, g_flat, \
                 row_stats
-        signal = jax.lax.pmean(jnp.stack(sigs), axes)
-        signal, new_adapt = adaptk.blend_signal(adapt_state, signal,
-                                                density_policy.ema)
-        K = adaptk.budget([g.size for g in g_leaves], ratio,
-                          density_policy, step)
-        k_alloc, K_eff = adaptk.allocate(
-            K, signal, [plans[li][2] for li in range(len(g_leaves))],
-            [plans[li][3] for li in range(len(g_leaves))])
+        k_alloc, K_eff, new_adapt = _adaptive_allocation(
+            adapt_state, sigs, sqs, [g.size for g in g_leaves], ratio,
+            density_policy, step,
+            [plans[li][2] for li in range(len(g_leaves))],
+            [plans[li][3] for li in range(len(g_leaves))], axes)
     else:
         for li, g in enumerate(g_leaves):
             plans[li] = leaf_plan(g.size, model_size, ratio, spec)
@@ -888,7 +924,7 @@ def aggregate_bucketed(grads, resid, layout: BucketLayout,
     seg_stats = None
     if adaptive:
         fusedp = resolve_backend(backend, spec)
-        sigs = []
+        sigs, sqs = [], []
         if fusedp:
             seg_stats = segmented_pass_a(
                 G, E, [(s.row_off, s.d_row) for s in layout.segments],
@@ -897,6 +933,7 @@ def aggregate_bucketed(grads, resid, layout: BucketLayout,
                 sm, sq, mx = _stats_reduce(rs)
                 sigs.append(adaptk.leaf_signal(density_policy.policy,
                                                s.size, sm, sq, mx))
+                sqs.append(sq)
         else:
             for s in layout.segments:
                 a, b = s.row_off, s.row_off + s.d_row
@@ -904,14 +941,12 @@ def aggregate_bucketed(grads, resid, layout: BucketLayout,
                     G[:, a:b], E[:, a:b], spec.name, False)
                 sigs.append(adaptk.leaf_signal(density_policy.policy,
                                                s.size, sm, sq, mx))
-        signal = jax.lax.pmean(jnp.stack(sigs), axes)
-        signal, new_adapt = adaptk.blend_signal(adapt_state, signal,
-                                                density_policy.ema)
-        K = adaptk.budget([s.size for s in layout.segments], layout.ratio,
-                          density_policy, step)
-        k_alloc, K_eff = adaptk.allocate(
-            K, signal, [s.k_lo for s in layout.segments],
-            [s.k_hi for s in layout.segments])
+                sqs.append(sq)
+        k_alloc, K_eff, new_adapt = _adaptive_allocation(
+            adapt_state, sigs, sqs, [s.size for s in layout.segments],
+            layout.ratio, density_policy, step,
+            [s.k_lo for s in layout.segments],
+            [s.k_hi for s in layout.segments], axes)
 
     # -- worker-local compression: ONE wire block --
     values, indices, new_E, new_V = bucket_compress(
@@ -1053,7 +1088,7 @@ def aggregate_bucketed_chunked(grads, resid, layout: BucketLayout,
     chunk_stats = [None] * plan.n_chunks
     if adaptive:
         fusedp = resolve_backend(backend, spec)
-        sigs = []
+        sigs, sqs = [], []
         for c, view in enumerate(views):
             if fusedp:
                 stats = segmented_pass_a(
@@ -1064,6 +1099,7 @@ def aggregate_bucketed_chunked(grads, resid, layout: BucketLayout,
                     sm, sq, mx = _stats_reduce(rs)
                     sigs.append(adaptk.leaf_signal(density_policy.policy,
                                                    s.size, sm, sq, mx))
+                    sqs.append(sq)
             else:
                 for s in view.segments:
                     a, b = s.row_off, s.row_off + s.d_row
@@ -1071,14 +1107,12 @@ def aggregate_bucketed_chunked(grads, resid, layout: BucketLayout,
                         Gs[c][:, a:b], Es[c][:, a:b], spec.name, False)
                     sigs.append(adaptk.leaf_signal(density_policy.policy,
                                                    s.size, sm, sq, mx))
-        signal = jax.lax.pmean(jnp.stack(sigs), axes)
-        signal, new_adapt = adaptk.blend_signal(adapt_state, signal,
-                                                density_policy.ema)
-        K = adaptk.budget([s.size for s in layout.segments], layout.ratio,
-                          density_policy, step)
-        k_alloc, K_eff = adaptk.allocate(
-            K, signal, [s.k_lo for s in layout.segments],
-            [s.k_hi for s in layout.segments])
+                    sqs.append(sq)
+        k_alloc, K_eff, new_adapt = _adaptive_allocation(
+            adapt_state, sigs, sqs, [s.size for s in layout.segments],
+            layout.ratio, density_policy, step,
+            [s.k_lo for s in layout.segments],
+            [s.k_hi for s in layout.segments], axes)
 
     # -- per-chunk compress + wire.  Below this point there are NO data
     # edges between chunks: XLA's scheduler is free to run chunk c's

@@ -24,7 +24,8 @@ def parse_args(argv=None):
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced smoke variant of the arch")
     ap.add_argument("--compressor", default="gaussiank",
-                    help="none|topk|randk|gaussiank|gaussiank2|dgck|trimmedk")
+                    help="none|topk|randk|gaussiank|gaussiank2|dgck|"
+                         "trimmedk|histk|rtopk")
     ap.add_argument("--ratio", type=float, default=0.001)
     ap.add_argument("--strategy", default="allgather",
                     choices=["allgather", "gtopk", "hierarchical"],
@@ -75,6 +76,17 @@ def parse_args(argv=None):
                     help="DGC-style exponential density warmup steps")
     ap.add_argument("--density-warmup-mult", type=float, default=16.0,
                     help="warmup start multiplier on the global budget")
+    ap.add_argument("--global-k-policy", default="none",
+                    choices=["none", "normdecay"],
+                    help="convergence-aware global-k controller (DESIGN.md "
+                         "§12): normdecay scales the global element budget "
+                         "by the estimated gradient-norm decay "
+                         "sqrt(EMA[grad-norm²]/first-norm²); needs an "
+                         "adaptive --density-policy")
+    ap.add_argument("--global-k-ema", type=float, default=0.9,
+                    help="EMA factor over the controller's norm estimate")
+    ap.add_argument("--global-k-floor", type=float, default=0.25,
+                    help="lowest budget scale the controller may reach")
     ap.add_argument("--optimizer", default="sgd",
                     choices=["sgd", "adamw"])
     ap.add_argument("--lr", type=float, default=0.1)
@@ -145,7 +157,15 @@ def main(argv=None):
             ceil_mult=args.density_ceil, ema=args.density_ema,
             warmup_steps=args.density_warmup,
             warmup_mult=args.density_warmup_mult if args.density_warmup
-            else 1.0)
+            else 1.0,
+            global_policy=args.global_k_policy,
+            global_ema=args.global_k_ema,
+            global_floor=args.global_k_floor)
+    elif args.global_k_policy != "none":
+        raise SystemExit(
+            "--global-k-policy scales the adaptive global budget, so it "
+            "needs an adaptive --density-policy (uniform|variance|absmax) "
+            "and a sparse dynamic-k compressor")
     params = init_params(cfg, jax.random.PRNGKey(args.seed))
     layout = None
     if args.pipeline == "bucketed" and args.compressor != "none":
@@ -184,7 +204,8 @@ def main(argv=None):
     print(f"arch={cfg.name} compressor={args.compressor} ratio={args.ratio} "
           f"strategy={strategy} backend={args.backend} mesh={args.mesh} "
           f"pipeline={args.pipeline} chunks={args.chunks} "
-          f"density_policy={pol_name or 'fixed-k'} steps={args.steps}")
+          f"density_policy={pol_name or 'fixed-k'} "
+          f"global_k={args.global_k_policy} steps={args.steps}")
     t0 = time.time()
     for i in range(args.steps):
         batch = batch_for(cfg, i, global_batch=args.batch, seq_len=args.seq,

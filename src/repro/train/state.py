@@ -51,8 +51,12 @@ def init_train_state(params, optimizer: Optimizer, *, workers: int,
 
     ``density_policy`` additionally allocates the adaptive-density
     controller state ``adaptk`` (the EMA'd per-leaf allocation signal,
-    replicated across workers — core/adaptk.py, DESIGN.md §9); it
-    checkpoints with the rest of the state."""
+    replicated across workers — core/adaptk.py, DESIGN.md §9); when the
+    policy enables a global-k controller (``global_policy != "none"``,
+    DESIGN.md §12) the state also carries the norm-decay scalars
+    ``gnorm``/``gnorm0``.  It checkpoints with the rest of the state
+    (pre-globalk checkpoints load through the ``checkpoint/npz.py``
+    zero-fill shim — the scalars self-seed on the next step)."""
     state: Dict[str, Any] = {
         "params": params,
         "opt": optimizer.init(params),
@@ -78,7 +82,8 @@ def init_train_state(params, optimizer: Optimizer, *, workers: int,
             state["resid2"] = jax.tree.map(stackw, one)
         if density_policy is not None:
             state["adaptk"] = adaptk.init_controller_state(
-                len(jax.tree.leaves(params)))
+                len(jax.tree.leaves(params)),
+                global_k=density_policy.global_policy != "none")
     return state
 
 

@@ -369,6 +369,174 @@ def check_adaptk():
     print("ADAPTK OK")
 
 
+def check_rtopk():
+    """Fixed-k rTop-k on the mesh == single-process simulation within
+    1e-7, for all three wire strategies (ISSUE 7 acceptance criterion),
+    plus the adaptive global-k (normdecay) controller path: the budget
+    the mesh reports must equal the simulated norm-decay-scaled budget
+    and the controller scalars must round-trip through the step.
+
+    The simulation mirrors the mesh path's key derivation exactly
+    (``lkey = fold_in(key, leaf_key_salt("w"))``, then one
+    ``jax.random.split(lkey, model_size)`` per compression), so the
+    strided r-samples — and with them every selected index — agree.
+    """
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import adaptk
+    from repro.dist import aggregate, compat
+
+    spec = get_compressor("rtopk")
+    ratio, d, msize = 0.02, 407, 2
+    d_pad, d_row, k_row, k_cap = aggregate.leaf_plan(d, msize, ratio, spec)
+    lkey = jax.random.fold_in(jax.random.PRNGKey(7),
+                              aggregate.leaf_key_salt("w"))
+
+    def mesh_run(shape, axes_names, strategy, with_r2, g, e, r2):
+        mesh = make_mesh(shape, axes_names)
+        W = data_world_size(mesh)
+        data_axes = tuple(a for a in axes_names if a != "model")
+        joint = data_axes if len(data_axes) > 1 else data_axes[0]
+
+        def body(g_loc, e_loc, *r2_loc):
+            r2t = {"w": r2_loc[0][0]} if r2_loc else None
+            agg, ne, nr2, _, _m = aggregate.aggregate_compressed(
+                {"w": g_loc[0]}, {"w": e_loc[0]}, spec, ratio, data_axes,
+                "model", msize, jax.random.PRNGKey(7), strategy=strategy,
+                resid2=r2t, world=W, backend="reference")
+            outs = (agg["w"], ne["w"][None])
+            if r2_loc:
+                outs += (nr2["w"][None],)
+            return outs
+
+        in_specs = (P(joint), P(joint)) + ((P(joint),) if with_r2 else ())
+        out_specs = (P(), P(joint)) + ((P(joint),) if with_r2 else ())
+        sm = compat.shard_map(body, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs,
+                              axis_names=set(data_axes), check_vma=False)
+        args = (g, e) + ((r2,) if with_r2 else ())
+        return jax.jit(sm)(*args)
+
+    def enc(flat, key):
+        rows = flat.reshape(msize, d_row)
+        keys = jax.random.split(key, msize)
+        v, i = jax.vmap(lambda r, kk: spec.select(r, k_row, kk))(rows,
+                                                                 keys)
+        dec = jax.vmap(lambda vv, ii: codec.decode(vv, ii, d_row))(v, i)
+        return v, i, dec
+
+    def simulate(W, n_pods, strategy, g, e, r2):
+        u = [e[w] + jnp.pad(g[w], (0, d_pad - d)) for w in range(W)]
+        partials, new_e = [], []
+        for w in range(W):
+            _, _, dec = enc(u[w], lkey)
+            partials.append(dec)
+            new_e.append(u[w] - dec.reshape(-1))
+        if strategy == "gtopk":
+            final, drops = aggregate.gtopk_simulate(partials, k_cap)
+            mean = final / W
+            new_e = [new_e[w] + drops[w].reshape(-1) for w in range(W)]
+            new_r2 = None
+        elif strategy == "hierarchical" and n_pods > 1:
+            n_inner = W // n_pods
+            pod_means = [sum(partials[p * n_inner + i]
+                             for i in range(n_inner)) / n_inner
+                         for p in range(n_pods)]
+            dec2, new_r2 = [None] * W, [None] * W
+            for w in range(W):
+                u2 = r2[w] + pod_means[w // n_inner].reshape(-1)
+                _, _, dd = enc(u2, jax.random.fold_in(lkey, 1))
+                dec2[w] = dd
+                new_r2[w] = u2 - dd.reshape(-1)
+            mean = sum(dec2[p * n_inner] for p in range(n_pods)) / n_pods
+        else:   # allgather (and the hierarchical fallback on 1 data axis)
+            mean = jnp.sum(jnp.stack(partials), axis=0) / W
+            new_r2 = None
+        return (mean.reshape(-1)[:d], jnp.stack(new_e),
+                jnp.stack(new_r2) if new_r2 else None)
+
+    cases = [((4, 2), ("data", "model"), "allgather", 1, False),
+             ((4, 2), ("data", "model"), "gtopk", 1, False),
+             ((4, 2), ("data", "model"), "hierarchical", 1, True),
+             ((2, 2, 2), ("pod", "data", "model"), "hierarchical", 2,
+              True)]
+    for shape, axes_names, strategy, n_pods, with_r2 in cases:
+        W = 4
+        g = jnp.stack([0.01 * jax.random.normal(jax.random.PRNGKey(w),
+                                                (d,)) for w in range(W)])
+        e = 0.001 * jax.random.normal(jax.random.PRNGKey(99), (W, d_pad))
+        r2 = (0.0005 * jax.random.normal(jax.random.PRNGKey(123),
+                                         (W, d_pad)) if with_r2 else None)
+        outs = mesh_run(shape, axes_names, strategy, with_r2, g, e, r2)
+        agg_s, e_s, r2_s = simulate(W, n_pods, strategy, g, e, r2)
+        agg_err = float(jnp.max(jnp.abs(outs[0] - agg_s)))
+        e_err = float(jnp.max(jnp.abs(outs[1] - e_s)))
+        assert agg_err < 1e-7, (strategy, shape, agg_err)
+        assert e_err < 1e-7, (strategy, shape, e_err)
+        if with_r2 and n_pods > 1:
+            r2_err = float(jnp.max(jnp.abs(outs[2] - r2_s)))
+            assert r2_err < 1e-7, (strategy, shape, r2_err)
+        print(f"  rtopk {strategy} on {shape}: agg_err={agg_err:.2e} "
+              f"e_err={e_err:.2e}")
+
+    # -- adaptive rTop-k + global-k controller on the (4,2) mesh --
+    policy = adaptk.make_policy("variance", global_policy="normdecay",
+                                global_ema=0.0, global_floor=0.25)
+    _, _, k_lo, k_hi, k_cap_a = aggregate.leaf_plan_adaptive(
+        d, msize, ratio, spec, policy)
+    mesh = make_mesh((4, 2), ("data", "model"))
+    W = 4
+
+    def body(g_loc, e_loc, st_loc):
+        agg, ne, _, new_st, m = aggregate.aggregate_compressed(
+            {"w": g_loc[0]}, {"w": e_loc[0]}, spec, ratio, ("data",),
+            "model", msize, jax.random.PRNGKey(7), strategy="allgather",
+            world=W, backend="reference", density_policy=policy,
+            adapt_state=st_loc, step=jnp.int32(0))
+        return agg["w"], ne["w"][None], new_st, m["k_total"]
+
+    run = jax.jit(compat.shard_map(
+        body, mesh=mesh, in_specs=(P("data"), P("data"), P()),
+        out_specs=(P(), P("data"), P(), P()),
+        axis_names={"data"}, check_vma=False))
+
+    def sim_step(g, e, state):
+        u = [e[w] + jnp.pad(g[w], (0, d_pad - d)) for w in range(W)]
+        sig = jnp.mean(jnp.stack([
+            adaptk.leaf_signal("variance", d, jnp.sum(u[w]),
+                               jnp.sum(u[w] * u[w]),
+                               jnp.max(jnp.abs(u[w])))
+            for w in range(W)]))
+        sq_tot = jnp.mean(jnp.stack([jnp.sum(u[w] * u[w])
+                                     for w in range(W)]))
+        signal, state = adaptk.blend_signal(state, sig[None], policy.ema)
+        scale, upd = adaptk.global_scale(state, sq_tot, policy)
+        state = {**state, **upd}
+        K = adaptk.scale_budget(adaptk.budget([d], ratio, policy, 0),
+                                scale)
+        _, K_eff = adaptk.allocate(K, signal, [k_lo], [k_hi])
+        return int(K_eff), state
+
+    g = jnp.stack([0.01 * jax.random.normal(jax.random.PRNGKey(w), (d,))
+                   for w in range(W)])
+    e = 0.001 * jax.random.normal(jax.random.PRNGKey(99), (W, d_pad))
+    state = adaptk.init_controller_state(1, global_k=True)
+    sstate = {k: v for k, v in state.items()}
+    for i, sc in enumerate((1.0, 0.5, 0.25)):
+        _, ne_m, state, kt = run(sc * g, sc * e, state)
+        K_sim, sstate = sim_step(sc * g, sc * e, sstate)
+        assert int(kt) == K_sim, (i, int(kt), K_sim)
+        for kk in ("gnorm", "gnorm0"):
+            err = abs(float(state[kk]) - float(sstate[kk]))
+            assert err < 1e-5 * max(1.0, float(sstate[kk])), (i, kk, err)
+        e = ne_m / sc  # keep residual state evolving step to step
+        print(f"  rtopk globalk step {i}: k_total={int(kt)} "
+              f"gnorm={float(state['gnorm']):.4g}")
+    assert float(state["gnorm0"]) > 0.0
+    print("RTOPK OK")
+
+
 def check_bucketed():
     """Bucketed aggregation (ISSUE 5) == per-leaf aggregation BIT-exactly
     on real meshes, for all three wire strategies, fixed-k and adaptive,
@@ -694,4 +862,5 @@ def check_multipod():
 if __name__ == "__main__":
     {"eq2": check_eq2, "dense": check_dense, "gtopk": check_gtopk,
      "multipod": check_multipod, "adaptk": check_adaptk,
-     "bucketed": check_bucketed, "chunked": check_chunked}[sys.argv[1]]()
+     "rtopk": check_rtopk, "bucketed": check_bucketed,
+     "chunked": check_chunked}[sys.argv[1]]()

@@ -6,12 +6,14 @@ real package cannot be installed (CI's ``properties`` job installs the
 pinned real thing from pyproject's ``[test]`` extra and this shim steps
 aside).  The fallback implements the tiny slice of the API the suite
 uses — ``@given`` over ``strategies.integers`` / ``sampled_from`` /
-``booleans`` plus ``@settings(max_examples=..., deadline=...)`` — as a
-deterministic seeded sweep.
+``booleans`` / ``floats`` / ``tuples`` plus
+``@settings(max_examples=..., deadline=...)`` — as a deterministic
+seeded sweep.
 """
 from __future__ import annotations
 
 import random
+import struct
 import sys
 import types
 
@@ -41,6 +43,30 @@ def _install_hypothesis_stub():
         def draw(self, rng):
             return rng.random() < 0.5
 
+    class _Floats:
+        # accepts (and for allow_nan/allow_infinity ignores — the stub
+        # draws finite uniforms only) the kwargs the conformance suite
+        # passes to the real strategy
+        def __init__(self, min_value=None, max_value=None, *,
+                     allow_nan=None, allow_infinity=None, width=64,
+                     **_kw):
+            self.lo = -1e6 if min_value is None else min_value
+            self.hi = 1e6 if max_value is None else max_value
+            self.width = width
+
+        def draw(self, rng):
+            x = rng.uniform(self.lo, self.hi)
+            if self.width == 32:
+                x = struct.unpack("f", struct.pack("f", x))[0]
+            return x
+
+    class _Tuples:
+        def __init__(self, *strategies):
+            self.strategies = strategies
+
+        def draw(self, rng):
+            return tuple(s.draw(rng) for s in self.strategies)
+
     def given(*strategies):
         def deco(fn):
             # no functools.wraps: pytest must see a zero-arg signature,
@@ -69,6 +95,8 @@ def _install_hypothesis_stub():
     st.integers = _Integers
     st.sampled_from = _SampledFrom
     st.booleans = _Booleans
+    st.floats = _Floats
+    st.tuples = _Tuples
     mod = types.ModuleType("hypothesis")
     mod.given = given
     mod.settings = settings

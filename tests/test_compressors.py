@@ -117,6 +117,81 @@ def test_property_paper_bound_gaussian(seed):
     assert g <= bounds.bound_paper(k, d) + 1e-6
 
 
+def test_gaussiank_cap_edge_geometry():
+    """k == d, k == 1 and tiny-d corners of the static capacity law."""
+    # k == d: the 4k/3 over-allocation clamps to the vector itself
+    assert compressors.gaussiank_cap(7, 7) == 7
+    assert compressors.gaussiank_cap(1, 1) == 1
+    # k == 1: ceil(4/3) == 2 slots (the refinement band upper edge)
+    assert compressors.gaussiank_cap(1, 100) == 2
+    # capacity never exceeds d even when 4k/3 rounds past it
+    assert compressors.gaussiank_cap(6, 7) == 7
+    for d in (1, 2, 3, 100):
+        for k in range(1, d + 1):
+            cap = compressors.gaussiank_cap(k, d)
+            assert k <= cap + 1 and cap <= d  # band upper edge, clamped
+
+
+@pytest.mark.parametrize("d,k", [
+    (64, 64),    # k == d: sample is the whole vector, exact top-k
+    (4096, 1),   # k == 1
+    (3, 2),      # d smaller than the 1% sample floor
+    (1, 1),      # degenerate single element
+    (50, 49),    # sample stride d // s == 1
+])
+def test_dgck_select_edge_geometry(d, k):
+    """DGC's sampled-threshold path at the corners where the sample
+    stride or candidate cap degenerates: the codec contract must still
+    hold and (for exact small cases) recover true top-k mass."""
+    spec = get_compressor("dgck")
+    u = _u(11, d, 0.5)
+    v, i = spec.select(u, k, jax.random.PRNGKey(13))
+    v, i = np.asarray(v), np.asarray(i)
+    assert v.shape == (spec.k_cap(k, d),)
+    real = i != SENTINEL
+    assert np.all((i[real] >= 0) & (i[real] < d))
+    assert len(set(i[real].tolist())) == int(real.sum())
+    np.testing.assert_allclose(v[real], np.asarray(u)[i[real]], rtol=1e-6)
+    if k == d:
+        # whole vector sampled: the candidate threshold can drop nothing
+        np.testing.assert_allclose(np.sort(np.abs(v)),
+                                   np.sort(np.abs(np.asarray(u)))[-k:],
+                                   rtol=1e-6)
+
+
+@pytest.mark.parametrize("d,k", [(64, 64), (4096, 1), (3, 2), (1, 1),
+                                 (50, 49)])
+def test_rtopk_select_edge_geometry(d, k):
+    """rTop-k at the same corners: the strided r-sample stays
+    duplicate-free and the in-sample top-k fills exactly k real slots."""
+    spec = get_compressor("rtopk")
+    assert spec.k_cap(k, d) == min(d, k)
+    r = compressors.rtopk_sample_size(k, d)
+    assert k <= r <= d
+    u = _u(17, d, 0.5)
+    v, i = spec.select(u, k, jax.random.PRNGKey(19))
+    v, i = np.asarray(v), np.asarray(i)
+    assert np.all(i != SENTINEL), "rtopk returns exactly k real pairs"
+    assert len(set(i.tolist())) == k
+    np.testing.assert_allclose(v, np.asarray(u)[i], rtol=1e-6)
+    if r == d:
+        # sample covers the vector: in-sample top-k IS exact top-k
+        np.testing.assert_allclose(np.sort(np.abs(v)),
+                                   np.sort(np.abs(np.asarray(u)))[-k:],
+                                   rtol=1e-6)
+
+
+def test_strided_sample_duplicate_free():
+    """The systematic sample underpinning dgck/rtopk: s distinct indices
+    for every s <= d, including s == d and stride-1 geometries."""
+    for d, s in [(10, 10), (10, 9), (7, 3), (1, 1), (4096, 41)]:
+        idx = np.asarray(compressors._strided_sample(
+            jax.random.PRNGKey(23), d, s))
+        assert idx.shape == (s,)
+        assert np.all((idx >= 0) & (idx < d))
+        assert len(set(idx.tolist())) == s, (d, s)
+
+
 def test_codec_roundtrip_sentinel():
     v = jnp.array([1.0, 2.0, 0.0])
     i = jnp.array([5, 2, SENTINEL], jnp.int32)

@@ -78,3 +78,13 @@ def test_adaptive_density_matches_simulation():
     with the k_total metric matching the allocator's exact budget."""
     out = _run("adaptk")
     assert "ADAPTK OK" in out
+
+
+@pytest.mark.slow
+def test_rtopk_matches_simulation():
+    """rTop-k end-to-end on the (4,2) mesh == single-process simulation
+    within 1e-7 for all three wire strategies (ISSUE 7 acceptance), plus
+    the global-k normdecay controller: the mesh's k_total must equal
+    the simulated norm-decay-scaled budget step for step."""
+    out = _run("rtopk")
+    assert "RTOPK OK" in out

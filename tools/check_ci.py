@@ -1,7 +1,7 @@
 #!/usr/bin/env python
 """CI workflow hygiene audit (stdlib only — no pyyaml in the image).
 
-Two invariants over ``.github/workflows/*.yml``:
+Three invariants over ``.github/workflows/*.yml``:
 
 1. every job carries an explicit ``timeout-minutes`` budget (a job
    without one inherits the 6-hour GitHub default and can burn a runner
@@ -9,7 +9,12 @@ Two invariants over ``.github/workflows/*.yml``:
 2. no job inlines ``pip install -e`` — the editable install (and its
    pip/JAX-wheel cache policy) lives in ONE place, the
    ``.github/actions/setup-repro`` composite action, so install drift
-   between jobs is structurally impossible.
+   between jobs is structurally impossible;
+3. the ``properties`` job (when the workflow has one) runs BOTH engine
+   legs — real ``hypothesis`` with a pinned ``--hypothesis-seed`` and
+   the conftest fallback ``stub`` — and includes the compressor-
+   conformance suite; dropping a leg would let the other engine rot
+   silently (tier-1 only ever exercises whichever engine is installed).
 
 The parser is deliberately dumb: jobs are the 2-space-indented keys of
 the ``jobs:`` block.  It fails loudly when it finds no jobs at all, so
@@ -45,6 +50,28 @@ def parse_jobs(text: str) -> dict:
     return jobs
 
 
+def audit_properties(path: str, body: list) -> list:
+    """Invariant 3: both property-engine legs, seeded, conformance in."""
+    text = "\n".join(body)
+    errors = []
+    for leg in ("hypothesis", "stub"):
+        if not re.search(rf"engine:\s*{leg}\b", text):
+            errors.append(
+                f"{path}: properties job is missing the {leg!r} engine "
+                "matrix leg — the suite must run under real hypothesis "
+                "AND the conftest fallback stub")
+    if "--hypothesis-seed=" not in text:
+        errors.append(
+            f"{path}: properties job does not pin --hypothesis-seed — "
+            "unseeded sweeps make failures unreproducible")
+    if "test_compressor_conformance.py" not in text:
+        errors.append(
+            f"{path}: properties job does not run "
+            "tests/test_compressor_conformance.py — every registered "
+            "compressor spec must pass the conformance contract in CI")
+    return errors
+
+
 def audit(path: str) -> list:
     with open(path) as f:
         text = f.read()
@@ -61,6 +88,8 @@ def audit(path: str) -> list:
             errors.append(
                 f"{path}: job {name!r} inlines the editable install — "
                 "use the .github/actions/setup-repro composite action")
+        if name == "properties":
+            errors += audit_properties(path, body)
     return errors
 
 

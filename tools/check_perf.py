@@ -33,6 +33,21 @@ adaptk (``BENCH_adaptk.json``, gated when ``--adaptk-measured`` /
   against the committed baseline;
 * every baseline policy is still measured.
 
+rtopk (``BENCH_rtopk.json``, schema ``rtopk/v1``, gated when
+``--rtopk-measured`` / ``--rtopk-baseline`` are passed) — machine-
+independent invariants of the rTop-k sweep (DESIGN.md §12):
+
+* every density row's wire volume is EXACT (rTop-k always fills its
+  ``k`` budget — losing that means the sampler or codec drifted);
+* rTop-k tail accuracy neither collapses against exact top-k at the
+  same density (>= topk - 0.15) nor regresses > 0.1 against the
+  committed baseline;
+* the normdecay global-k controller never communicates more than its
+  uncontrolled twin on any step (its scale is <= 1 by construction)
+  and its tail accuracy does not collapse (>= base - 0.15, >=
+  baseline - 0.1);
+* every baseline density is still measured.
+
 overlap (``BENCH_overlap.json``, schema ``overlap/v1``, gated when
 ``--overlap-measured`` / ``--overlap-baseline`` are passed) — the
 chunked-schedule gate (DESIGN.md §11):
@@ -238,6 +253,77 @@ def check_overlap(measured: dict, baseline: dict, tol: float) -> list:
     return errors
 
 
+RTOPK_SCHEMA = "rtopk/v1"
+
+
+def load_rtopk(path: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    if data.get("schema") != RTOPK_SCHEMA:
+        raise SystemExit(f"{path}: unexpected schema "
+                         f"{data.get('schema')!r} (want {RTOPK_SCHEMA!r})")
+    if not isinstance(data.get("densities"), dict) or not data["densities"]:
+        raise SystemExit(f"{path}: no densities section (not an rtopk "
+                         "benchmark artifact?)")
+    return data
+
+
+def check_rtopk(measured: dict, baseline: dict) -> list:
+    """Every gated field is REQUIRED (module docstring): a benchmark
+    refactor that renames or drops one must fail the gate, not skip."""
+    errors = []
+    for ratio, row in measured["densities"].items():
+        missing = [k for k in ("comm_exact", "tail_acc_rtopk",
+                               "tail_acc_topk") if k not in row]
+        if missing:
+            errors.append(f"rtopk@{ratio}: missing gated fields {missing}")
+            continue
+        if not row["comm_exact"]:
+            errors.append(
+                f"rtopk@{ratio}: wire volume not exact — rTop-k must "
+                "communicate precisely k per leaf per step")
+        if row["tail_acc_rtopk"] < row["tail_acc_topk"] - 0.15:
+            errors.append(
+                f"rtopk@{ratio}: tail_acc {row['tail_acc_rtopk']:.3f} "
+                f"collapsed vs exact top-k {row['tail_acc_topk']:.3f}")
+    for ratio, base in baseline["densities"].items():
+        got = measured["densities"].get(ratio)
+        if got is None:
+            errors.append(f"rtopk@{ratio}: density missing from measured "
+                          "file")
+        elif got.get("tail_acc_rtopk", 0.0) < base["tail_acc_rtopk"] - 0.1:
+            errors.append(
+                f"rtopk@{ratio}: tail_acc {got['tail_acc_rtopk']:.3f} > "
+                f"0.1 below baseline {base['tail_acc_rtopk']:.3f}")
+    g = measured.get("globalk")
+    if not g:
+        errors.append("rtopk: globalk section missing from measured file")
+        return errors
+    missing = [k for k in ("never_above_base", "tail_acc", "tail_acc_base")
+               if k not in g]
+    if missing:
+        errors.append(f"rtopk/globalk: missing gated fields {missing}")
+        return errors
+    if not g["never_above_base"]:
+        errors.append(
+            "rtopk/globalk: controller communicated MORE than its "
+            "uncontrolled twin on some step — the normdecay scale must "
+            "be <= 1")
+    if g["tail_acc"] < g["tail_acc_base"] - 0.15:
+        errors.append(
+            f"rtopk/globalk: tail_acc {g['tail_acc']:.3f} collapsed vs "
+            f"uncontrolled {g['tail_acc_base']:.3f}")
+    base_g = baseline.get("globalk", {}).get("tail_acc")
+    if base_g is None:
+        errors.append("rtopk: baseline missing globalk.tail_acc "
+                      "(regenerate it with --update)")
+    elif g["tail_acc"] < base_g - 0.1:
+        errors.append(
+            f"rtopk/globalk: tail_acc {g['tail_acc']:.3f} > 0.1 below "
+            f"baseline {base_g:.3f}")
+    return errors
+
+
 def load_adaptk(path: str) -> dict:
     with open(path) as f:
         data = json.load(f)
@@ -300,6 +386,11 @@ def main(argv=None) -> int:
                          "adaptk gate)")
     ap.add_argument("--adaptk-baseline", default="",
                     help="committed benchmarks/baselines/adaptk.json")
+    ap.add_argument("--rtopk-measured", default="",
+                    help="freshly emitted BENCH_rtopk.json (enables the "
+                         "rtopk gate)")
+    ap.add_argument("--rtopk-baseline", default="",
+                    help="committed benchmarks/baselines/rtopk.json")
     ap.add_argument("--overlap-measured", default="",
                     help="freshly emitted BENCH_overlap.json (enables "
                          "the chunked-schedule gate)")
@@ -316,6 +407,9 @@ def main(argv=None) -> int:
     if bool(args.adaptk_measured) != bool(args.adaptk_baseline):
         raise SystemExit("--adaptk-measured and --adaptk-baseline go "
                          "together")
+    if bool(args.rtopk_measured) != bool(args.rtopk_baseline):
+        raise SystemExit("--rtopk-measured and --rtopk-baseline go "
+                         "together")
     if bool(args.overlap_measured) != bool(args.overlap_baseline):
         raise SystemExit("--overlap-measured and --overlap-baseline go "
                          "together")
@@ -328,6 +422,10 @@ def main(argv=None) -> int:
             load_adaptk(args.adaptk_measured)
             shutil.copyfile(args.adaptk_measured, args.adaptk_baseline)
             print(f"baseline updated: {args.adaptk_baseline}")
+        if args.rtopk_measured:
+            load_rtopk(args.rtopk_measured)
+            shutil.copyfile(args.rtopk_measured, args.rtopk_baseline)
+            print(f"baseline updated: {args.rtopk_baseline}")
         if args.overlap_measured:
             load_overlap(args.overlap_measured)
             shutil.copyfile(args.overlap_measured, args.overlap_baseline)
@@ -339,6 +437,9 @@ def main(argv=None) -> int:
     if args.adaptk_measured:
         errors += check_adaptk(load_adaptk(args.adaptk_measured),
                                load_adaptk(args.adaptk_baseline))
+    if args.rtopk_measured:
+        errors += check_rtopk(load_rtopk(args.rtopk_measured),
+                              load_rtopk(args.rtopk_baseline))
     if args.overlap_measured:
         errors += check_overlap(load_overlap(args.overlap_measured),
                                 load_overlap(args.overlap_baseline),
