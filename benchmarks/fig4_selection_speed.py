@@ -116,6 +116,7 @@ def _dispatch_rows():
     from jax.sharding import PartitionSpec as P
 
     from repro.core import get_compressor
+    from repro.core.compression import CompressionConfig
     from repro.dist import aggregate, compat
     from repro.dist.layout import build_layout
     from repro.launch.hlo_cost import count_wire_collectives
@@ -131,17 +132,18 @@ def _dispatch_rows():
 
     rows, bench = [], []
     for strategy in ("allgather", "gtopk"):
-        def per_leaf(g, e):
-            return aggregate.aggregate_compressed(
-                g, e, spec, ratio, ("data",), "model", msize,
-                jax.random.PRNGKey(0), strategy=strategy, world=W,
-                backend="reference")[0]
+        config = CompressionConfig(compressor="topk", ratio=ratio,
+                                   strategy=strategy, backend="reference")
 
-        def bucketed(g, e):
+        def per_leaf(g, e, config=config):
+            return aggregate.aggregate_compressed(
+                g, e, config, ("data",), "model", msize,
+                jax.random.PRNGKey(0), world=W).agg
+
+        def bucketed(g, e, config=config):
             return aggregate.aggregate_bucketed(
-                g, e, layout, spec, ("data",), "model",
-                jax.random.PRNGKey(0), strategy=strategy, world=W,
-                backend="reference")[0]
+                g, e, layout, config, ("data",), "model",
+                jax.random.PRNGKey(0), world=W).agg
 
         for method, fn, e_in in (("dispatch-perleaf", per_leaf, resid),
                                  ("dispatch-bucketed", bucketed, flat)):

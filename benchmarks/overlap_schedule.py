@@ -49,6 +49,7 @@ def _dispatch_rows():
     from jax.sharding import PartitionSpec as P
 
     from repro.core import get_compressor
+    from repro.core.compression import CompressionConfig
     from repro.dist import aggregate, compat
     from repro.dist.layout import build_chunk_plan, build_layout
     from repro.launch.hlo_cost import count_wire_collectives
@@ -69,15 +70,17 @@ def _dispatch_rows():
     )
     rows, bench = [], []
     for strategy, mesh, data_axes, with_r2 in cases:
+        config = CompressionConfig(compressor="topk", ratio=ratio,
+                                   strategy=strategy, backend="reference")
         for n in CHUNKS:
             plan = build_chunk_plan(layout, n)
 
-            def agg_fn(g, e, *r2s):
+            def agg_fn(g, e, *r2s, plan=plan, config=config,
+                       data_axes=data_axes):
                 return aggregate.aggregate_bucketed_chunked(
-                    g, e, layout, plan, spec, data_axes, "model",
-                    jax.random.PRNGKey(0), strategy=strategy, world=W,
-                    resid2=r2s[0] if r2s else None,
-                    backend="reference")[0]
+                    g, e, layout, plan, config, data_axes, "model",
+                    jax.random.PRNGKey(0), world=W,
+                    resid2=r2s[0] if r2s else None).agg
 
             n_in = 3 if with_r2 else 2
             sm = compat.shard_map(
@@ -99,6 +102,7 @@ def _step_rows(smoke: bool):
     power-of-two data world the host exposes (8 under the CI flag)."""
     from benchmarks.common import timeit
     from repro.core import get_compressor
+    from repro.core.compression import CompressionConfig
     from repro.dist.layout import build_layout
     from repro.launch.mesh import make_mesh
     from repro.optim import constant, sgd_momentum
@@ -126,10 +130,11 @@ def _step_rows(smoke: bool):
     times = {}
     for n_chunks, method in ((1, "step-unchunked"),
                              (STEP_CHUNKS, "step-chunked")):
-        step = make_train_step(None, mesh, opt, constant(0.1),
-                               compressor="topk", ratio=ratio,
-                               loss_fn=loss_fn, layout=layout,
-                               chunks=n_chunks)
+        step = make_train_step(
+            None, mesh, opt, constant(0.1),
+            compression=CompressionConfig(compressor="topk", ratio=ratio,
+                                          chunks=n_chunks),
+            loss_fn=loss_fn, layout=layout)
         state = init_train_state(params, opt, workers=W, model_size=1,
                                  layout=layout)
         _, m = step(state, batch)  # compile

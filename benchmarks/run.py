@@ -18,7 +18,7 @@ import time
 
 MODULES = ["fig5_bound", "fig2_histograms", "fig1_fig6_convergence",
            "fig4_selection_speed", "fig10_sensitivity", "fig_rtopk",
-           "table2_scaling", "overlap_schedule"]
+           "table2_scaling", "overlap_schedule", "serve_staleness"]
 
 
 def run_module(name: str, smoke: bool = False) -> int:

@@ -1,0 +1,208 @@
+"""Train-to-serve delta-streaming benchmark (DESIGN.md §13, CI ``perf``).
+
+Row families, emitted to ``BENCH_serve.json`` (schema ``serve/v1``,
+gated by ``tools/check_perf.py --serve-*`` against
+``benchmarks/baselines/serve.json``):
+
+* ``delta-wire-r{ratio}`` — wire bits of ONE delta publish at each
+  publish ratio, straight from the re-budgeted layout geometry.
+  Deterministic and machine-independent; the gate pins them exactly
+  (a drifting value means the codec capacity rule or the message
+  framing changed).
+* ``resync-exact`` — 1 iff replica params are BIT-equal to trainer
+  params at every full-resync epoch of a simulated publish stream
+  (the publisher's load-bearing invariant; gated hard at 1).
+* ``gap-vs-resid`` — 1 iff the true staleness gap ``pack(trainer) -
+  pack(replica)`` equals the publisher residual to float tolerance at
+  every delta epoch (the invariant that makes staleness observable
+  for free).
+* ``tokens-frozen`` / ``tokens-streaming`` — decode throughput of a
+  tiny model on the (4, 2) mesh with weights frozen vs ingesting a
+  delta every other decode step.  On CPU the gate only checks that
+  streaming does not collapse throughput beyond a tolerance.
+
+Run via the harness (``python -m benchmarks.run serve --smoke``) or
+directly (``python -m benchmarks.serve_staleness --smoke --json
+BENCH_serve.json``); both give this module its own process, so the
+device-count flag below lands before jax initialises.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+BENCH_JSON = "BENCH_serve.json"
+SCHEMA = "serve/v1"
+RATIOS = (0.002, 0.01, 0.05)
+PUBLISH_TICKS = 12
+RESYNC_EVERY = 4
+
+
+def _stream_rows():
+    """Publisher/subscriber invariants + per-ratio wire bits over a
+    simulated publish stream (host arrays — no mesh needed)."""
+    from repro.core.compression import CompressionConfig
+    from repro.dist.layout import build_layout, pack_grads
+    from repro.serve import (RESYNC, apply_message, init_publisher_state,
+                             message_bits, publish)
+
+    msize = 2
+    key = jax.random.PRNGKey(0)
+    params = {f"layer{i}": 0.1 * jax.random.normal(
+        jax.random.fold_in(key, i), (96 + 16 * i,)) for i in range(6)}
+    shape = f"L6-M{msize}"
+    rows, bench = [], []
+    exact, gap_ok = 1, 1
+    for ratio in RATIOS:
+        config = CompressionConfig(compressor="topk", ratio=ratio,
+                                   backend="reference")
+        layout = build_layout(params, msize, config)
+        st = init_publisher_state(layout)
+        replica = jax.tree.map(jnp.zeros_like, params)
+        trainer = params
+        delta_bits = 0
+        for t in range(PUBLISH_TICKS):
+            trainer = jax.tree.map(
+                lambda x, s=t: x + 0.01 * jnp.sin(x * (s + 1)), trainer)
+            st, msg = publish(st, trainer, layout, config, key,
+                              resync_every=RESYNC_EVERY)
+            replica = apply_message(replica, layout, msg)
+            P = pack_grads(layout, trainer, jnp.float32)
+            R = pack_grads(layout, replica, jnp.float32)
+            if msg.kind == RESYNC:
+                for a, b in zip(jax.tree.leaves(replica),
+                                jax.tree.leaves(trainer)):
+                    if not np.array_equal(np.asarray(a), np.asarray(b)):
+                        exact = 0
+            else:
+                delta_bits = message_bits(msg)
+                gap = np.asarray(P - R)
+                if not np.allclose(gap, np.asarray(st["resid"]), atol=1e-5):
+                    gap_ok = 0
+            if not np.array_equal(np.asarray(st["pub"]), np.asarray(R)):
+                exact = 0  # pub must track the replica bitwise ALWAYS
+        bench.append({"shape": shape, "method": f"delta-wire-r{ratio}",
+                      "passes": delta_bits, "ms": 0.0})
+        rows.append((f"serve/delta-wire-r{ratio}/{shape}", 0.0,
+                     f"bits={delta_bits}"))
+    bench.append({"shape": shape, "method": "resync-exact",
+                  "passes": exact, "ms": 0.0})
+    bench.append({"shape": shape, "method": "gap-vs-resid",
+                  "passes": gap_ok, "ms": 0.0})
+    rows.append((f"serve/resync-exact/{shape}", 0.0, f"exact={exact}"))
+    rows.append((f"serve/gap-vs-resid/{shape}", 0.0, f"ok={gap_ok}"))
+    return rows, bench
+
+
+def _decode_rows(smoke: bool):
+    """Decode throughput on the (4, 2) mesh, frozen weights vs a delta
+    ingested every other decode step."""
+    import time
+
+    from repro.core.compression import CompressionConfig
+    from repro.dist.layout import build_layout
+    from repro.launch.mesh import make_mesh
+    from repro.models import ModelConfig, init_params
+    from repro.serve import (RESYNC, apply_resync, init_publisher_state,
+                             make_apply_delta, make_decode_step,
+                             make_prefill_step, publish)
+
+    cfg = ModelConfig(name="sv", arch_type="dense", num_layers=2,
+                      d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                      vocab_size=64).validate()
+    mesh = make_mesh((4, 2), ("data", "model"))
+    key = jax.random.PRNGKey(0)
+    B, T = 4, 16
+    gen = 8 if smoke else 32
+    s_max = T + gen
+    trainer = init_params(cfg, key)
+    config = CompressionConfig(compressor="topk", ratio=0.01)
+    layout = build_layout(trainer, 2, config)
+    prefill_step = make_prefill_step(cfg, mesh, s_max=s_max)
+    decode = jax.jit(make_decode_step(cfg, mesh))
+    prompt = jax.random.randint(key, (B, T), 0, cfg.vocab_size)
+
+    @jax.jit
+    def drift(p, i):
+        return jax.tree.map(
+            lambda x: x + 1e-3 * jnp.sin(x * (1.0 + 0.1 * i)), p)
+
+    shape = f"{cfg.name}-B{B}-g{gen}"
+    rows, bench = [], []
+    times = {}
+    for method in ("tokens-frozen", "tokens-streaming"):
+        params = jax.tree.map(lambda x: x + 0.0, trainer)
+        st = init_publisher_state(layout)
+        apply_jit = make_apply_delta(layout, mesh, params)
+        logits, cache = prefill_step(params, prompt)
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        jax.block_until_ready(tok)
+        tr = trainer
+        t0 = time.time()
+        for i in range(gen - 1):
+            if method == "tokens-streaming" and i % 2 == 0:
+                tr = drift(tr, jnp.float32(i))
+                st, msg = publish(st, tr, layout, config, key,
+                                  resync_every=RESYNC_EVERY)
+                if msg.kind == RESYNC:
+                    params = apply_resync(params, layout, msg.bucket)
+                else:
+                    params = apply_jit(params, msg.values, msg.indices)
+            logits, cache = decode(params, cache, jnp.int32(T + i), tok)
+            tok = jnp.argmax(logits[:, -1],
+                             axis=-1).astype(jnp.int32)[:, None]
+        jax.block_until_ready(tok)
+        ms = (time.time() - t0) * 1e3
+        toks = B * gen
+        times[method] = ms
+        bench.append({"shape": shape, "method": method, "passes": toks,
+                      "ms": round(ms, 3)})
+        rows.append((f"serve/{method}/{shape}", round(ms, 1),
+                     f"tokens={toks};tok_s={toks / (ms / 1e3):.1f}"))
+    ratio_t = times["tokens-streaming"] / times["tokens-frozen"]
+    rows.append((f"serve/stream-ratio/{shape}", 0.0,
+                 f"streaming_vs_frozen={ratio_t:.3f}x"))
+    return rows, bench
+
+
+def collect(smoke: bool = False):
+    s_rows, s_bench = _stream_rows()
+    d_rows, d_bench = _decode_rows(smoke)
+    return (s_rows + d_rows,
+            {"schema": SCHEMA, "smoke": smoke, "rows": s_bench + d_bench})
+
+
+def run(smoke: bool = False):
+    # harness entry point: report only — the committed baseline is
+    # rewritten solely by an explicit --json + check_perf --update
+    rows, data = collect(smoke)
+    rows.append((f"serve/{BENCH_JSON}", 0.0,
+                 f"rows={len(data['rows'])};smoke={smoke};not-written"))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="short decode loop (CI perf job)")
+    ap.add_argument("--json", default=BENCH_JSON,
+                    help=f"output path (default: {BENCH_JSON})")
+    args = ap.parse_args(argv)
+    rows, data = collect(args.smoke)
+    for r in rows:
+        print(",".join(str(x) for x in r), flush=True)
+    with open(args.json, "w") as f:
+        json.dump(data, f, indent=1)
+    print(f"wrote {args.json} ({len(data['rows'])} rows)")
+
+
+if __name__ == "__main__":
+    main()

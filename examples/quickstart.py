@@ -7,6 +7,7 @@ config -> params -> train state -> compressed train step -> metrics.
 """
 import jax
 
+from repro.core.compression import CompressionConfig
 from repro.data import lm_batch
 from repro.launch.mesh import make_mesh
 from repro.models import ModelConfig, init_params, param_count
@@ -25,10 +26,11 @@ def main():
 
     results = {}
     for comp in ("none", "topk", "randk", "gaussiank"):
+        config = CompressionConfig(compressor=comp, ratio=0.01)
         state = init_train_state(params, opt, workers=1, model_size=1,
-                                 with_residual=comp != "none")
+                                 compression=config)
         step = make_train_step(cfg, mesh, opt, constant(0.2),
-                               compressor=comp, ratio=0.01, remat=False)
+                               compression=config, remat=False)
         for i in range(30):
             batch = lm_batch(i, global_batch=8, seq_len=64,
                              vocab=cfg.vocab_size)

@@ -19,6 +19,7 @@ import time  # noqa: E402
 import jax  # noqa: E402
 
 from repro.checkpoint import save_state  # noqa: E402
+from repro.core.compression import CompressionConfig  # noqa: E402
 from repro.data import lm_batch  # noqa: E402
 from repro.launch.mesh import (data_world_size, make_mesh,  # noqa: E402
                                model_axis_size)
@@ -49,12 +50,14 @@ def main():
     n = param_count(params)
     print(f"model {cfg.name}: {n / 1e6:.1f}M params, mesh 4x2, "
           f"compressor={args.compressor} ratio={args.ratio}")
+    config = CompressionConfig(compressor=args.compressor,
+                               ratio=args.ratio)
     state = init_train_state(params, opt,
                              workers=data_world_size(mesh),
                              model_size=model_axis_size(mesh),
-                             with_residual=args.compressor != "none")
-    step = make_train_step(cfg, mesh, opt, lr, compressor=args.compressor,
-                           ratio=args.ratio, remat=True)
+                             compression=config)
+    step = make_train_step(cfg, mesh, opt, lr, compression=config,
+                           remat=True)
     t0 = time.time()
     for i in range(args.steps):
         batch = lm_batch(i, global_batch=args.batch, seq_len=args.seq,

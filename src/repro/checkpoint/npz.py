@@ -29,6 +29,12 @@ _BUCKET_KEYS = ("resid", "resid2")
 # ``global_scale``), so the migrated state is exact after one step
 _GLOBALK_KEYS = ("adaptk/gnorm", "adaptk/gnorm0")
 
+# serve-publisher cursor (DESIGN.md §13) absent from checkpoints written
+# before delta streaming: zero-filled on load — "publish/seq" == 0 forces
+# the next publish to be a full resync, so the re-seeded cursor never
+# streams deltas against a stale published view
+_PUBLISH_PREFIX = "publish" + _SEP
+
 
 def _flatten(tree) -> dict:
     flat = {}
@@ -89,7 +95,8 @@ def load_state(path: str, like: Any, *, layout: Optional[Any] = None) -> Any:
             str(getattr(e, "key", getattr(e, "idx", e))) for e in path_)
         if key not in flat and layout is not None and key in _BUCKET_KEYS:
             arr = _migrate_legacy_residual(flat, key, leaf, layout)
-        elif key not in flat and key in _GLOBALK_KEYS:
+        elif key not in flat and (key in _GLOBALK_KEYS or
+                                  key.startswith(_PUBLISH_PREFIX)):
             arr = np.zeros(leaf.shape, leaf.dtype)
         else:
             arr = flat[key]

@@ -1,16 +1,20 @@
 """Core contribution of the paper: Top-k sparsification with error feedback,
 the Gaussian_k approximate selector, and the contraction-bound analysis."""
-from repro.core import adaptk, bounds, codec, compressors, error_feedback
+from repro.core import (adaptk, bounds, codec, compression, compressors,
+                        error_feedback)
 from repro.core.adaptk import DensityPolicy, make_policy
 from repro.core.codec import SENTINEL, compact_by_mask, decode, decode_add, nnz
+from repro.core.compression import STRATEGIES, CompressionConfig
 from repro.core.compressors import available, get_compressor
 from repro.core.error_feedback import (BACKENDS, compress_with_ef,
                                        init_residual, resolve_backend,
                                        supports_fused)
 
 __all__ = [
-    "adaptk", "bounds", "codec", "compressors", "error_feedback",
+    "adaptk", "bounds", "codec", "compression", "compressors",
+    "error_feedback",
     "DensityPolicy", "make_policy",
+    "STRATEGIES", "CompressionConfig",
     "SENTINEL", "compact_by_mask", "decode", "decode_add", "nnz",
     "available", "get_compressor", "compress_with_ef", "init_residual",
     "BACKENDS", "resolve_backend", "supports_fused",

@@ -1,0 +1,123 @@
+"""One frozen config for every compression consumer (DESIGN.md §13).
+
+Four consumers drive the same codec/bucket machinery — the per-leaf,
+bucketed and chunked gradient aggregators plus the serve-side weight-delta
+publisher — and before this module each threaded the same ~12 kwargs
+(compressor, ratio, strategy, codec dtype, momentum correction, backend,
+density policy, chunk count, global-k controller fields) positionally
+through every layer.  :class:`CompressionConfig` is the single value that
+travels instead: hashable (usable as a jit static argument), validated at
+construction, and the one place the strategy vocabulary lives.
+
+The legacy kwarg spellings still work everywhere but forward loudly
+through ``DeprecationWarning`` shims (see ``dist/aggregate.py`` and
+``train/step.py``); the legacy boolean ``hierarchical=True`` flag maps to
+``strategy="hierarchical"`` at the same boundary.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+from repro.core.adaptk import DensityPolicy
+from repro.core.compressors import CompressorSpec, get_compressor
+from repro.core.error_feedback import BACKENDS
+
+# The wire-strategy vocabulary (DESIGN.md §3-§4, §7).  Single source:
+# ``dist.layout`` / ``dist.aggregate`` re-export it from here.
+STRATEGIES = ("allgather", "gtopk", "hierarchical")
+
+# Compressor spelling for Dense-SGD (no sparsification, dense all-reduce).
+DENSE = "none"
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    """What to compress with and how to move it — nothing about *where*
+    (mesh axes, world size and runtime state stay per-call arguments).
+
+    ``compressor``           registry name (``core.compressors``), or
+                             ``"none"`` for Dense-SGD.
+    ``ratio``                target density δ = k/d per leaf.
+    ``strategy``             wire pattern, one of :data:`STRATEGIES`.
+    ``codec_dtype``          wire dtype for the values half of the codec
+                             pair (None = keep the gradient dtype).
+    ``momentum_correction``  DGC local-momentum factor (0 = off).
+    ``backend``              EF pipeline backend (``core.error_feedback``:
+                             "auto" | "fused" | "reference").
+    ``density_policy``       adaptive layer-wise :class:`DensityPolicy`
+                             (None = fixed k); the global-k controller
+                             fields ride inside the policy.
+    ``chunks``               bucket chunk count for the overlapped wire
+                             schedule (DESIGN.md §11; 1 = unchunked).
+    """
+
+    compressor: str = "gaussiank"
+    ratio: float = 0.001
+    strategy: str = "allgather"
+    codec_dtype: Optional[Any] = None
+    momentum_correction: float = 0.0
+    backend: str = "auto"
+    density_policy: Optional[DensityPolicy] = None
+    chunks: int = 1
+
+    def __post_init__(self):
+        if self.compressor is None:
+            object.__setattr__(self, "compressor", DENSE)
+        if self.strategy not in STRATEGIES:
+            raise ValueError(f"unknown strategy {self.strategy!r}; "
+                             f"have {STRATEGIES}")
+        if self.backend not in BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r}; "
+                             f"have {BACKENDS}")
+        if self.chunks < 1:
+            raise ValueError(f"chunks must be >= 1, got {self.chunks}")
+        if self.momentum_correction < 0.0 or self.momentum_correction >= 1.0:
+            raise ValueError("momentum_correction must be in [0, 1), "
+                             f"got {self.momentum_correction}")
+        if not self.dense:
+            get_compressor(self.compressor)   # raises on unknown names
+            if not 0.0 < self.ratio <= 1.0:
+                raise ValueError(f"ratio must be in (0, 1], got {self.ratio}")
+        else:
+            if self.density_policy is not None:
+                raise ValueError("density_policy has no meaning for "
+                                 "Dense-SGD (compressor='none')")
+            if self.momentum_correction:
+                raise ValueError("momentum_correction rides the sparse EF "
+                                 "pipeline; meaningless for Dense-SGD")
+        if self.density_policy is not None \
+                and not isinstance(self.density_policy, DensityPolicy):
+            raise TypeError("density_policy must be a DensityPolicy "
+                            "(core.adaptk.make_policy), got "
+                            f"{type(self.density_policy).__name__}")
+
+    # -- derived views ------------------------------------------------------
+
+    @property
+    def dense(self) -> bool:
+        """True for Dense-SGD (no codec, dense all-reduce)."""
+        return self.compressor == DENSE
+
+    @property
+    def spec(self) -> Optional[CompressorSpec]:
+        """The registry :class:`CompressorSpec` (None when dense)."""
+        return None if self.dense else get_compressor(self.compressor)
+
+    @property
+    def adaptive(self) -> bool:
+        return self.density_policy is not None
+
+    def replace(self, **changes) -> "CompressionConfig":
+        """Functional update (re-validates through ``__post_init__``)."""
+        return dataclasses.replace(self, **changes)
+
+
+def as_config(value) -> CompressionConfig:
+    """Coerce ``None`` (defaults) or a config; reject everything else."""
+    if value is None:
+        return CompressionConfig()
+    if isinstance(value, CompressionConfig):
+        return value
+    raise TypeError("expected a CompressionConfig (or None), got "
+                    f"{type(value).__name__}")

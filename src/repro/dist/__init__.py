@@ -18,7 +18,8 @@ the shard_map version-compat shims.
                the ppermute shim the gTop-k rounds ride on).
 """
 from repro.dist import aggregate, compat, layout, sharding
-from repro.dist.aggregate import (STRATEGIES, aggregate_bucketed,
+from repro.dist.aggregate import (STRATEGIES, AggregateResult,
+                                  aggregate_bucketed,
                                   aggregate_bucketed_chunked,
                                   aggregate_compressed, aggregate_dense,
                                   bucket_compress, gtopk_simulate,
@@ -28,20 +29,22 @@ from repro.dist.layout import (BucketLayout, ChunkPlan, build_chunk_plan,
                                build_layout, chunk_view, collective_count,
                                init_flat_residual, leaf_key_salt,
                                pack_grads, pack_residual_arrays,
-                               unpack_residual_arrays, unpack_tree,
-                               validate_chunk_plan)
+                               rebudget_layout, unpack_residual_arrays,
+                               unpack_tree, validate_chunk_plan)
 from repro.dist.sharding import (cache_specs, param_spec, param_specs,
                                  train_state_specs)
 
 __all__ = [
     "aggregate", "compat", "layout", "sharding",
-    "STRATEGIES", "aggregate_bucketed", "aggregate_bucketed_chunked",
+    "STRATEGIES", "AggregateResult", "aggregate_bucketed",
+    "aggregate_bucketed_chunked",
     "aggregate_compressed", "aggregate_dense", "bucket_compress",
     "gtopk_simulate", "init_residuals", "resolve_strategy",
     "strategy_wire_pairs",
     "BucketLayout", "ChunkPlan", "build_chunk_plan", "build_layout",
     "chunk_view", "collective_count", "init_flat_residual",
     "leaf_key_salt", "pack_grads", "pack_residual_arrays",
-    "unpack_residual_arrays", "unpack_tree", "validate_chunk_plan",
+    "rebudget_layout", "unpack_residual_arrays", "unpack_tree",
+    "validate_chunk_plan",
     "cache_specs", "param_spec", "param_specs", "train_state_specs",
 ]

@@ -69,12 +69,14 @@ and the two dispatch granularities must key identically.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+import warnings
+from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import adaptk, codec
+from repro.core.compression import CompressionConfig
 from repro.core.compressors import CompressorSpec
 from repro.core.error_feedback import resolve_backend
 from repro.dist import compat
@@ -90,6 +92,75 @@ from repro.dist.layout import (STRATEGIES, BucketLayout,  # noqa: F401
 from repro.kernels.ef_fused.segmented import (rows_compress_ef, rows_pass_a,
                                               segmented_compress_ef,
                                               segmented_pass_a)
+
+# ---------------------------------------------------------------------------
+# result type + config shims (shared by all aggregation entry points)
+# ---------------------------------------------------------------------------
+
+
+class AggregateResult(NamedTuple):
+    """What every aggregation entry point returns (replaces the legacy
+    positional 5-tuple — same field order, so old unpacking code keeps
+    working through one release while new code reads fields by name).
+
+    ``agg``          the Eq.-2 averaged gradient, leaf tree shape/dtype.
+    ``resid``        updated error-feedback residual (per-leaf tree or
+                     flat bucket, matching the input).
+    ``resid2``       updated second-level residual / DGC velocity state
+                     (``None`` when neither is in play).
+    ``adapt_state``  updated adaptk controller state (``None`` unless
+                     adaptive density with a stateful controller).
+    ``metrics``      replicated scalar metrics dict.
+    """
+    agg: Any
+    resid: Any
+    resid2: Any
+    adapt_state: Any
+    metrics: dict
+
+
+_LEGACY_KEYS = ("strategy", "hierarchical", "codec_dtype",
+                "momentum_correction", "backend", "density_policy")
+
+
+def _config_from_legacy(fn: str, spec: CompressorSpec, ratio: float,
+                        legacy: dict) -> CompressionConfig:
+    """Build a :class:`CompressionConfig` from the deprecated loose-kwarg
+    spelling (CompressorSpec positional + strategy/backend/... kwargs),
+    warning loudly.  ``hierarchical=True`` routes through
+    ``resolve_strategy`` — the one shim boundary for the retired flag."""
+    warnings.warn(
+        f"{fn}: passing a CompressorSpec with loose kwargs is deprecated; "
+        "pass a core.compression.CompressionConfig instead",
+        DeprecationWarning, stacklevel=3)
+    strategy = resolve_strategy(legacy.pop("strategy", "allgather"),
+                                legacy.pop("hierarchical", False))
+    cfg = CompressionConfig(
+        compressor=spec.name, ratio=float(ratio), strategy=strategy,
+        codec_dtype=legacy.pop("codec_dtype", None),
+        momentum_correction=float(legacy.pop("momentum_correction", 0.0)),
+        backend=legacy.pop("backend", "auto"),
+        density_policy=legacy.pop("density_policy", None))
+    if legacy:
+        raise TypeError(f"{fn}: unexpected kwargs {sorted(legacy)}")
+    return cfg
+
+
+def _require_config(fn: str, config, legacy: dict) -> CompressionConfig:
+    """Config-first path: a real config and NO loose legacy kwargs."""
+    if not isinstance(config, CompressionConfig):
+        raise TypeError(
+            f"{fn}: expected a CompressionConfig (or a legacy "
+            f"CompressorSpec), got {type(config).__name__}")
+    if legacy:
+        raise TypeError(
+            f"{fn}: legacy kwargs {sorted(legacy)} cannot be combined with "
+            "a CompressionConfig — fold them in via config.replace(...)")
+    if config.dense:
+        raise ValueError(f"{fn}: compressor='none' is Dense-SGD; call "
+                         "aggregate_dense instead")
+    return config
+
 
 # ---------------------------------------------------------------------------
 # residual layout
@@ -510,12 +581,15 @@ def _gather_mean(values, indices, axis, n: int, d_row: int, dtype):
     return jnp.sum(decoded, axis=0) / n
 
 
-def _wire_config(strategy: str, hierarchical: bool, axes, resid2, world: int,
+def _wire_config(strategy: str, axes, resid2, world: int,
                  mc: float, adaptive: bool, spec: CompressorSpec):
-    """Resolve + validate the wire configuration (single source for both
-    dispatch granularities).  Returns ``(strategy, hier, gtopk,
-    outer_axis, inner_axes, n_pods, n_inner, world)``."""
-    strategy = resolve_strategy(strategy, hierarchical)
+    """Validate the wire configuration (single source for both dispatch
+    granularities).  ``strategy`` arrives already normalized — the config
+    layer (``CompressionConfig`` / ``resolve_strategy``) owns the
+    vocabulary.  Returns ``(strategy, hier, gtopk, outer_axis,
+    inner_axes, n_pods, n_inner, world)``."""
+    if strategy not in STRATEGIES:
+        raise ValueError(f"unknown strategy {strategy!r}; have {STRATEGIES}")
     if adaptive and mc > 0.0:
         raise ValueError("momentum_correction is fixed-k only (the DGC "
                          "velocity update needs the static-k path); "
@@ -549,8 +623,10 @@ def _wire_config(strategy: str, hierarchical: bool, axes, resid2, world: int,
                          "gtopk path, not hierarchical aggregation")
     if mc > 0.0 and resid2 is None:
         raise ValueError("momentum_correction needs a velocity state: "
-                         "allocate resid2 via init_train_state(..., "
-                         "strategy='hierarchical')")
+                         "init_train_state allocates resid2 whenever "
+                         "momentum_correction > 0 (or "
+                         "strategy='hierarchical') in its compression "
+                         "config")
     if hier:
         outer_axis, inner_axes = axes[0], axes[1:]
         n_pods = compat.axis_size(outer_axis)
@@ -597,39 +673,49 @@ def _adaptive_allocation(adapt_state, sigs, sqs, dims, ratio, policy, step,
     return k_alloc, K_eff, new_adapt
 
 
-def aggregate_compressed(grads, resid, spec: CompressorSpec, ratio: float,
-                         data_axes, model_axis: str, model_size: int, key, *,
-                         strategy: str = "allgather",
-                         hierarchical: bool = False, resid2=None,
-                         world: int = 1, codec_dtype=None,
-                         momentum_correction: float = 0.0,
-                         backend: str = "auto",
-                         density_policy=None, adapt_state=None, step=None):
+def aggregate_compressed(grads, resid, config, *args, resid2=None,
+                         world: int = 1, adapt_state=None, step=None,
+                         **legacy):
     """Eq. (2) sparse aggregation of a gradient pytree — per-leaf loop.
 
-    ``strategy`` picks the wire pattern (module docstring, DESIGN.md §3,
-    §7): ``"allgather"`` (flat, O(W) pairs), ``"hierarchical"``
-    (two-level pod -> global, needs ``resid2`` and >= 2 data axes — falls
-    back to flat otherwise), or ``"gtopk"`` (recursive doubling, O(log W)
-    pairs, needs power-of-two data-axis sizes).  ``hierarchical=True`` is
-    the legacy spelling of ``strategy="hierarchical"``.
+    Config-first signature::
 
-    Returns ``(agg, new_resid, new_resid2, new_adapt_state, metrics)``;
-    ``agg`` has the gradient's tree/shape/dtype, residual trees are
-    flat-padded like ``init_residuals``.  ``metrics`` are replicated
-    scalars: ``density`` (measured nnz fraction), ``comm_bits_sparse`` /
-    ``comm_bits_dense`` (per-worker wire volume, compile-time constants),
-    ``wire_bytes`` and ``collectives_per_step`` (the dispatch count this
-    granularity pays — L per wire level here; see
-    :func:`aggregate_bucketed` for the 1-per-level pipeline).
+        aggregate_compressed(grads, resid, config, data_axes, model_axis,
+                             model_size, key, *, resid2=None, world=1,
+                             adapt_state=None, step=None)
 
-    ``backend`` selects the per-worker compression pipeline
+    ``config`` is a :class:`~repro.core.compression.CompressionConfig`
+    carrying compressor/ratio/strategy/codec_dtype/momentum_correction/
+    backend/density_policy; mesh geometry (``data_axes``, ``model_axis``,
+    ``model_size``) and runtime state (``resid2``, ``world``,
+    ``adapt_state``, ``step``) stay per-call.  The legacy spelling —
+    a ``CompressorSpec`` + ``ratio`` positionals with loose
+    ``strategy=``/``hierarchical=``/... kwargs — still works but emits a
+    ``DeprecationWarning`` and forwards through the same config.
+
+    ``config.strategy`` picks the wire pattern (module docstring,
+    DESIGN.md §3, §7): ``"allgather"`` (flat, O(W) pairs),
+    ``"hierarchical"`` (two-level pod -> global, needs ``resid2`` and
+    >= 2 data axes — falls back to flat otherwise), or ``"gtopk"``
+    (recursive doubling, O(log W) pairs, needs power-of-two data-axis
+    sizes).
+
+    Returns an :class:`AggregateResult` ``(agg, resid, resid2,
+    adapt_state, metrics)``; ``agg`` has the gradient's tree/shape/dtype,
+    residual trees are flat-padded like ``init_residuals``.  ``metrics``
+    are replicated scalars: ``density`` (measured nnz fraction),
+    ``comm_bits_sparse`` / ``comm_bits_dense`` (per-worker wire volume,
+    compile-time constants), ``wire_bytes`` and ``collectives_per_step``
+    (the dispatch count this granularity pays — L per wire level here;
+    see :func:`aggregate_bucketed` for the 1-per-level pipeline).
+
+    ``config.backend`` selects the per-worker compression pipeline
     (``"auto"``/``"fused"``/``"reference"``, DESIGN.md §8) for every
     wire strategy — it changes HBM passes, never wire or Eq.-2
     semantics.
 
-    ``density_policy`` (a ``core.adaptk.DensityPolicy``) switches every
-    leaf to the adaptive-density path (DESIGN.md §9): pass A of the
+    ``config.density_policy`` (a ``core.adaptk.DensityPolicy``) switches
+    every leaf to the adaptive-density path (DESIGN.md §9): pass A of the
     fused pipeline runs first for every leaf, the per-leaf moments are
     pmean'd over the data axes (one identical allocation on every
     worker), and the global budget ``K_total(step)`` is redistributed
@@ -638,15 +724,38 @@ def aggregate_compressed(grads, resid, spec: CompressorSpec, ratio: float,
     widths and the wire volume stay the compile-time constants derived
     from the ceiling clamp.  ``adapt_state`` carries the EMA controller
     state (lives in TrainState; ``None`` = stateless) and is returned
-    updated as ``new_adapt_state``; ``step`` feeds the DGC warmup
-    schedule.  Adaptive mode requires a ``DYNAMIC_COMPRESSORS`` member
-    and is mutually exclusive with ``momentum_correction``.
+    updated; ``step`` feeds the DGC warmup schedule.  Adaptive mode
+    requires a ``DYNAMIC_COMPRESSORS`` member and is mutually exclusive
+    with ``momentum_correction``.
     """
+    if isinstance(config, CompressorSpec):
+        if "ratio" in legacy:
+            ratio = legacy.pop("ratio")
+        else:
+            ratio, args = args[0], args[1:]
+        config = _config_from_legacy("aggregate_compressed", config, ratio,
+                                     legacy)
+    else:
+        config = _require_config("aggregate_compressed", config, legacy)
+    data_axes, model_axis, model_size, key = args
+    return _aggregate_compressed(grads, resid, config, data_axes,
+                                 model_axis, model_size, key, resid2=resid2,
+                                 world=world, adapt_state=adapt_state,
+                                 step=step)
+
+
+def _aggregate_compressed(grads, resid, config: CompressionConfig,
+                          data_axes, model_axis: str, model_size: int, key,
+                          *, resid2, world: int, adapt_state, step):
+    spec, ratio = config.spec, config.ratio
+    codec_dtype = config.codec_dtype
+    backend = config.backend
+    density_policy = config.density_policy
     axes = tuple(data_axes)
-    mc = float(momentum_correction)
+    mc = float(config.momentum_correction)
     adaptive = density_policy is not None
     strategy, hier, gtopk, outer_axis, inner_axes, n_pods, n_inner, world = \
-        _wire_config(strategy, hierarchical, axes, resid2, world, mc,
+        _wire_config(config.strategy, axes, resid2, world, mc,
                      adaptive, spec)
     use_v = mc > 0.0
 
@@ -784,8 +893,8 @@ def aggregate_compressed(grads, resid, spec: CompressorSpec, ratio: float,
     new_resid = treedef.unflatten(new_e_leaves)
     new_resid2 = (treedef.unflatten(new_r2_leaves)
                   if resid2 is not None else None)
-    return (treedef.unflatten(agg_leaves), new_resid, new_resid2,
-            new_adapt, metrics)
+    return AggregateResult(treedef.unflatten(agg_leaves), new_resid,
+                           new_resid2, new_adapt, metrics)
 
 
 # ---------------------------------------------------------------------------
@@ -872,15 +981,16 @@ def bucket_compress(G: jax.Array, E: jax.Array, layout: BucketLayout,
     return values, indices, new_E, new_V
 
 
-def aggregate_bucketed(grads, resid, layout: BucketLayout,
-                       spec: CompressorSpec, data_axes, model_axis: str,
-                       key, *, strategy: str = "allgather",
-                       hierarchical: bool = False, resid2=None,
-                       world: int = 1, codec_dtype=None,
-                       momentum_correction: float = 0.0,
-                       backend: str = "auto", density_policy=None,
-                       adapt_state=None, step=None):
+def aggregate_bucketed(grads, resid, layout: BucketLayout, config,
+                       *args, resid2=None, world: int = 1,
+                       adapt_state=None, step=None, **legacy):
     """Eq. (2) sparse aggregation over the flat bucketed pipeline.
+
+    Config-first signature::
+
+        aggregate_bucketed(grads, resid, layout, config, data_axes,
+                           model_axis, key, *, resid2=None, world=1,
+                           adapt_state=None, step=None)
 
     Same semantics and return contract as :func:`aggregate_compressed`
     (bit-identical results — asserted by tests/_dist_check.py
@@ -894,12 +1004,33 @@ def aggregate_bucketed(grads, resid, layout: BucketLayout,
       gtopk          log2(W) ppermute rounds (per-leaf: L·log2(W))
 
     ``ratio``/``model_size`` come from the layout (which must have been
-    built for this ``spec`` and density mode — validated loudly).
-    Returns ``(agg, new_resid, new_resid2, new_adapt_state, metrics)``
-    with flat-bucket residuals.
+    built for this config's ``spec`` and density mode — validated
+    loudly).  The legacy spelling (a ``CompressorSpec`` in the config
+    slot + loose kwargs) forwards with a ``DeprecationWarning``.
+    Returns an :class:`AggregateResult` with flat-bucket residuals.
     """
+    if isinstance(config, CompressorSpec):
+        config = _config_from_legacy(
+            "aggregate_bucketed", config,
+            legacy.pop("ratio", layout.ratio), legacy)
+    else:
+        config = _require_config("aggregate_bucketed", config, legacy)
+    data_axes, model_axis, key = args
+    return _aggregate_bucketed(grads, resid, layout, config, data_axes,
+                               model_axis, key, resid2=resid2, world=world,
+                               adapt_state=adapt_state, step=step)
+
+
+def _aggregate_bucketed(grads, resid, layout: BucketLayout,
+                        config: CompressionConfig, data_axes,
+                        model_axis: str, key, *, resid2, world: int,
+                        adapt_state, step):
+    spec = config.spec
+    codec_dtype = config.codec_dtype
+    backend = config.backend
+    density_policy = config.density_policy
     axes = tuple(data_axes)
-    mc = float(momentum_correction)
+    mc = float(config.momentum_correction)
     adaptive = density_policy is not None
     if layout.spec_name != spec.name:
         raise ValueError(f"layout was built for compressor "
@@ -910,7 +1041,7 @@ def aggregate_bucketed(grads, resid, layout: BucketLayout,
             f"density_policy={'set' if adaptive else 'None'}; rebuild the "
             "layout with the matching density_policy")
     strategy, hier, gtopk, outer_axis, inner_axes, n_pods, n_inner, world = \
-        _wire_config(strategy, hierarchical, axes, resid2, world, mc,
+        _wire_config(config.strategy, axes, resid2, world, mc,
                      adaptive, spec)
 
     M, D = layout.model_size, layout.d_row_total
@@ -1003,7 +1134,8 @@ def aggregate_bucketed(grads, resid, layout: BucketLayout,
         metrics["density_budget"] = (K_eff.astype(jnp.float32)
                                      / layout.d_total)
     new_resid2 = new_R2.reshape(-1) if resid2 is not None else None
-    return agg, new_E.reshape(-1), new_resid2, new_adapt, metrics
+    return AggregateResult(agg, new_E.reshape(-1), new_resid2, new_adapt,
+                           metrics)
 
 
 # ---------------------------------------------------------------------------
@@ -1013,17 +1145,19 @@ def aggregate_bucketed(grads, resid, layout: BucketLayout,
 
 
 def aggregate_bucketed_chunked(grads, resid, layout: BucketLayout,
-                               plan: ChunkPlan, spec: CompressorSpec,
-                               data_axes, model_axis: str, key, *,
-                               strategy: str = "allgather",
-                               hierarchical: bool = False, resid2=None,
-                               world: int = 1, codec_dtype=None,
-                               momentum_correction: float = 0.0,
-                               backend: str = "auto", density_policy=None,
-                               adapt_state=None, step=None):
+                               plan: ChunkPlan, config, *args,
+                               resid2=None, world: int = 1,
+                               adapt_state=None, step=None, **legacy):
     """:func:`aggregate_bucketed` re-dispatched as ``plan.n_chunks``
     independent compress+wire chains — the overlapped schedule
     (DESIGN.md §11).
+
+    Config-first signature::
+
+        aggregate_bucketed_chunked(grads, resid, layout, plan, config,
+                                   data_axes, model_axis, key, *,
+                                   resid2=None, world=1,
+                                   adapt_state=None, step=None)
 
     Identical semantics and BIT-identical results (asserted by
     tests/_dist_check.py ``chunked``): every chunk group runs the same
@@ -1043,9 +1177,32 @@ def aggregate_bucketed_chunked(grads, resid, layout: BucketLayout,
     all-gathers / 2N for hierarchical / N·log2(W) gTop-k rounds) —
     reported in ``metrics["collectives_per_step"]``; total wire volume
     is unchanged.  ``plan`` must tile this exact ``layout`` (validated
-    loudly)."""
+    loudly).  Returns an :class:`AggregateResult` with flat-bucket
+    residuals."""
+    if isinstance(config, CompressorSpec):
+        config = _config_from_legacy(
+            "aggregate_bucketed_chunked", config,
+            legacy.pop("ratio", layout.ratio), legacy)
+    else:
+        config = _require_config("aggregate_bucketed_chunked", config,
+                                 legacy)
+    data_axes, model_axis, key = args
+    return _aggregate_bucketed_chunked(
+        grads, resid, layout, plan, config, data_axes, model_axis, key,
+        resid2=resid2, world=world, adapt_state=adapt_state, step=step)
+
+
+def _aggregate_bucketed_chunked(grads, resid, layout: BucketLayout,
+                                plan: ChunkPlan,
+                                config: CompressionConfig, data_axes,
+                                model_axis: str, key, *, resid2,
+                                world: int, adapt_state, step):
+    spec = config.spec
+    codec_dtype = config.codec_dtype
+    backend = config.backend
+    density_policy = config.density_policy
     axes = tuple(data_axes)
-    mc = float(momentum_correction)
+    mc = float(config.momentum_correction)
     adaptive = density_policy is not None
     if layout.spec_name != spec.name:
         raise ValueError(f"layout was built for compressor "
@@ -1057,7 +1214,7 @@ def aggregate_bucketed_chunked(grads, resid, layout: BucketLayout,
             "layout with the matching density_policy")
     validate_chunk_plan(layout, plan)
     strategy, hier, gtopk, outer_axis, inner_axes, n_pods, n_inner, world = \
-        _wire_config(strategy, hierarchical, axes, resid2, world, mc,
+        _wire_config(config.strategy, axes, resid2, world, mc,
                      adaptive, spec)
 
     M, D = layout.model_size, layout.d_row_total
@@ -1188,4 +1345,5 @@ def aggregate_bucketed_chunked(grads, resid, layout: BucketLayout,
     new_resid2 = (jnp.concatenate(
         [blk.astype(R2.dtype) for blk in new_R2_blocks], axis=1
         ).reshape(-1) if resid2 is not None else None)
-    return agg, new_E.reshape(-1), new_resid2, new_adapt, metrics
+    return AggregateResult(agg, new_E.reshape(-1), new_resid2, new_adapt,
+                           metrics)

@@ -45,19 +45,19 @@ from __future__ import annotations
 
 import hashlib
 import math
+import warnings
 from typing import NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import adaptk
+from repro.core.compression import STRATEGIES, CompressionConfig
 from repro.core.compressors import CompressorSpec
 
 # ---------------------------------------------------------------------------
 # wire model (single source: per-leaf metrics, layout metrics, benchmarks)
 # ---------------------------------------------------------------------------
-
-STRATEGIES = ("allgather", "gtopk", "hierarchical")
 
 
 def _log2_exact(n: int, what: str = "world size") -> int:
@@ -74,9 +74,19 @@ def resolve_strategy(strategy: str, hierarchical: bool = False) -> str:
     """Normalize the legacy ``hierarchical=True`` flag into the strategy
     vocabulary (single source of the precedence rule for every layer and
     CLI): it promotes the default ``"allgather"`` only — an explicitly
-    chosen strategy always wins.  Raises on unknown strategies."""
-    if hierarchical and strategy == "allgather":
-        return "hierarchical"
+    chosen strategy always wins.  Raises on unknown strategies.
+
+    ``hierarchical=True`` is deprecated — THE shim boundary for the
+    retired boolean flag; pass ``strategy="hierarchical"`` (or a
+    ``CompressionConfig``) instead."""
+    if hierarchical:
+        warnings.warn(
+            "hierarchical=True is deprecated; pass "
+            "strategy='hierarchical' (or CompressionConfig("
+            "strategy='hierarchical')) instead",
+            DeprecationWarning, stacklevel=2)
+        if strategy == "allgather":
+            return "hierarchical"
     if strategy not in STRATEGIES:
         raise ValueError(f"unknown strategy {strategy!r}; have {STRATEGIES}")
     return strategy
@@ -270,11 +280,17 @@ class BucketLayout(NamedTuple):
         return collective_count(strategy, world, n_pods, leaves=1)
 
 
-def build_layout(params, model_size: int, ratio: float,
-                 spec: CompressorSpec,
+def build_layout(params, model_size: int, ratio,
+                 spec: Optional[CompressorSpec] = None,
                  density_policy: Optional[adaptk.DensityPolicy] = None,
                  ) -> BucketLayout:
     """Compute the static bucket geometry from a param/grad pytree.
+
+    The third argument is either the density ``ratio`` (with ``spec``
+    and optionally ``density_policy`` alongside) or a
+    :class:`~repro.core.compression.CompressionConfig`, which supplies
+    all three — the config-first spelling shared with ``make_train_step``
+    and the serve publisher.
 
     Segment order is the tree flatten order (matching
     ``jax.tree.flatten`` and the adaptk controller's signal vector);
@@ -283,6 +299,18 @@ def build_layout(params, model_size: int, ratio: float,
     would silently correlate their sampling — astronomically unlikely,
     but fail loudly rather than degrade).
     """
+    if isinstance(ratio, CompressionConfig):
+        if spec is not None or density_policy is not None:
+            raise TypeError("build_layout: pass EITHER a CompressionConfig "
+                            "OR (ratio, spec, density_policy), not both")
+        cfg = ratio
+        if cfg.dense:
+            raise ValueError("cannot build a BucketLayout for Dense-SGD "
+                             "(compressor='none')")
+        ratio, spec, density_policy = cfg.ratio, cfg.spec, cfg.density_policy
+    elif spec is None:
+        raise TypeError("build_layout needs a CompressorSpec when called "
+                        "with a plain ratio")
     leaves = jax.tree_util.tree_flatten_with_path(params)[0]
     if not leaves:
         raise ValueError("cannot build a BucketLayout over an empty pytree")
@@ -317,6 +345,34 @@ def build_layout(params, model_size: int, ratio: float,
                         ratio=float(ratio), spec_name=spec.name,
                         adaptive=density_policy is not None,
                         d_row_total=row_off, k_cap_total=cap_off)
+
+
+def rebudget_layout(layout: BucketLayout, ratio: float,
+                    spec: CompressorSpec) -> BucketLayout:
+    """The same bucket re-budgeted at a different (ratio, spec) — the
+    delta-layout reuse behind the serve publisher (DESIGN.md §13).
+
+    Row geometry (``d_row``, ``row_off``, names, salts, segment order)
+    depends only on leaf sizes and ``model_size``, so it is carried over
+    verbatim: a residual or params bucket packed under ``layout`` is
+    byte-compatible with the re-budgeted one.  Only the codec capacities
+    (``k_row``, ``k_cap``, ``cap_off``) are recomputed, fixed-k — the
+    publisher never runs adaptive density."""
+    if isinstance(ratio, CompressionConfig):
+        raise TypeError("rebudget_layout takes a plain ratio + spec "
+                        "(build_layout accepts the config spelling)")
+    segments, cap_off = [], 0
+    for s in layout.segments:
+        k = max(1, math.ceil(ratio * s.size))
+        k_row = row_budget(k, layout.model_size, s.d_row)
+        k_cap = min(s.d_row, spec.k_cap(k_row, s.d_row))
+        segments.append(s._replace(k_row=k_row, k_cap=k_cap,
+                                   cap_off=cap_off, k_lo=k, k_hi=k))
+        cap_off += k_cap
+    return BucketLayout(segments=tuple(segments),
+                        model_size=layout.model_size, ratio=float(ratio),
+                        spec_name=spec.name, adaptive=False,
+                        d_row_total=layout.d_row_total, k_cap_total=cap_off)
 
 
 # ---------------------------------------------------------------------------

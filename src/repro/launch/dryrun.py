@@ -25,6 +25,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro.configs import (ARCHS, INPUT_SHAPES, applicable, get_config,  # noqa: E402
                            input_specs)
+from repro.core.compression import CompressionConfig  # noqa: E402
 from repro.dist import sharding as shd  # noqa: E402
 from repro.dist.aggregate import resolve_strategy  # noqa: E402
 from repro.launch import hlo_cost  # noqa: E402
@@ -64,13 +65,14 @@ def lower_train(cfg, mesh, shape, compressor, strategy="allgather",
     workers = data_world_size(mesh)
     opt = sgd_momentum(0.9)
 
+    config = CompressionConfig(compressor=compressor, ratio=ratio,
+                               strategy=strategy, codec_dtype=codec_dtype)
     pshapes = jax.eval_shape(functools.partial(init_params, cfg),
                              jax.random.PRNGKey(0))
     state_sds = jax.eval_shape(
         lambda p: init_train_state(
             p, opt, workers=workers, model_size=msize,
-            with_residual=compressor not in (None, "none"),
-            strategy=strategy, resid_dtype=jnp.bfloat16),
+            compression=config, resid_dtype=jnp.bfloat16),
         pshapes)
 
     pspecs = shd.param_specs(pshapes, "model", msize)
@@ -96,9 +98,7 @@ def lower_train(cfg, mesh, shape, compressor, strategy="allgather",
     batch_in = _with_sharding(batch_sds, bspecs, mesh)
 
     step = make_train_step(cfg, mesh, opt, constant(0.01),
-                           compressor=compressor, ratio=ratio,
-                           strategy=strategy, remat=True,
-                           codec_dtype=codec_dtype)
+                           compression=config, remat=True)
     return step.lower(state_in, batch_in)
 
 

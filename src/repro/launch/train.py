@@ -87,6 +87,16 @@ def parse_args(argv=None):
                     help="EMA factor over the controller's norm estimate")
     ap.add_argument("--global-k-floor", type=float, default=0.25,
                     help="lowest budget scale the controller may reach")
+    ap.add_argument("--publish-every", type=int, default=0,
+                    help="publish a compressed weight delta for serving "
+                         "replicas every N steps (serve/publish.py, "
+                         "DESIGN.md §13); 0 = no publishing")
+    ap.add_argument("--publish-ratio", type=float, default=0.01,
+                    help="density of the publish delta stream (top-k over "
+                         "params - published view)")
+    ap.add_argument("--resync-every", type=int, default=8,
+                    help="every Nth publish ships the dense bucket: "
+                         "replica == trainer exactly at those epochs")
     ap.add_argument("--optimizer", default="sgd",
                     choices=["sgd", "adamw"])
     ap.add_argument("--lr", type=float, default=0.1)
@@ -184,33 +194,75 @@ def main(argv=None):
             "--chunks > 1 needs the bucketed sparse pipeline: use "
             "--pipeline bucketed with a sparse compressor (the chunked "
             "schedule re-dispatches the flat wire block, DESIGN.md §11)")
+    from repro.core.compression import CompressionConfig
+
+    config = CompressionConfig(
+        compressor=args.compressor, ratio=args.ratio, strategy=strategy,
+        backend=args.backend, density_policy=policy, chunks=args.chunks)
     state = init_train_state(
         params, opt, workers=data_world_size(mesh),
         model_size=model_axis_size(mesh),
-        with_residual=args.compressor not in ("none",),
-        strategy=strategy, density_policy=policy, layout=layout)
+        compression=config, layout=layout)
+
+    pub_state = pub_layout = pub_config = None
+    if args.publish_every > 0:
+        from repro.core.compressors import get_compressor
+        from repro.dist.layout import build_layout, rebudget_layout
+        from repro.serve import init_publisher_state
+
+        pub_config = CompressionConfig(compressor="topk",
+                                       ratio=args.publish_ratio,
+                                       backend=args.backend)
+        if layout is not None:
+            # delta-layout reuse: same row geometry as the gradient wire,
+            # codec capacities re-budgeted at the publish ratio
+            pub_layout = rebudget_layout(layout, args.publish_ratio,
+                                         get_compressor("topk"))
+        else:
+            pub_layout = build_layout(params, model_axis_size(mesh),
+                                      pub_config)
+        pub_state = init_publisher_state(pub_layout)
+
     if args.resume:
         # layout enables the per-leaf -> flat-bucket residual migration
-        # shim for checkpoints written before the bucketed pipeline
-        state = load_state(args.resume, state, layout=layout)
+        # shim for checkpoints written before the bucketed pipeline; the
+        # publisher cursor rides under "publish/" (zero-filled when the
+        # checkpoint predates it -> seq 0 forces a resync first)
+        if pub_state is not None:
+            full = load_state(args.resume, dict(state, publish=pub_state),
+                              layout=layout)
+            pub_state = full.pop("publish")
+            state = full
+        else:
+            state = load_state(args.resume, state, layout=layout)
 
-    step = make_train_step(cfg, mesh, opt, lr_fn,
-                           compressor=args.compressor, ratio=args.ratio,
-                           strategy=strategy, backend=args.backend,
+    step = make_train_step(cfg, mesh, opt, lr_fn, compression=config,
                            remat=not args.smoke, seed=args.seed,
-                           density_policy=policy, layout=layout,
-                           chunks=args.chunks)
+                           layout=layout)
 
     print(f"arch={cfg.name} compressor={args.compressor} ratio={args.ratio} "
           f"strategy={strategy} backend={args.backend} mesh={args.mesh} "
           f"pipeline={args.pipeline} chunks={args.chunks} "
           f"density_policy={pol_name or 'fixed-k'} "
           f"global_k={args.global_k_policy} steps={args.steps}")
+    if pub_state is not None:
+        from repro.serve import RESYNC, message_bits, publish
+        pub_key = jax.random.fold_in(jax.random.PRNGKey(args.seed), 0x9B)
+        pub_bits, n_deltas, n_resyncs = 0, 0, 0
     t0 = time.time()
     for i in range(args.steps):
         batch = batch_for(cfg, i, global_batch=args.batch, seq_len=args.seq,
                           seed=args.seed)
         state, m = step(state, batch)
+        if pub_state is not None and (i + 1) % args.publish_every == 0:
+            pub_state, msg = publish(pub_state, state["params"], pub_layout,
+                                     pub_config, pub_key,
+                                     resync_every=args.resync_every)
+            pub_bits += message_bits(msg)
+            if msg.kind == RESYNC:
+                n_resyncs += 1
+            else:
+                n_deltas += 1
         if i % args.log_every == 0 or i == args.steps - 1:
             comm = ""
             if "comm_bits_sparse" in m:
@@ -223,8 +275,12 @@ def main(argv=None):
             print(f"step {i:5d} loss={float(m['loss']):.4f} "
                   f"lr={float(m['lr']):.4g}{comm} "
                   f"({time.time() - t0:.1f}s)", flush=True)
+    if pub_state is not None:
+        print(f"published {n_deltas} deltas + {n_resyncs} resyncs "
+              f"({pub_bits / 8 / 2 ** 20:.3f} MiB on the wire)")
     if args.checkpoint:
-        save_state(args.checkpoint, state)
+        save_state(args.checkpoint, dict(state, publish=pub_state)
+                   if pub_state is not None else state)
         print(f"saved -> {args.checkpoint}")
     return 0
 

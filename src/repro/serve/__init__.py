@@ -1,5 +1,13 @@
+from repro.serve.publish import (DELTA, RESYNC, DeltaMessage, encode_delta,
+                                 init_publisher_state, message_bits, publish,
+                                 publisher_config)
 from repro.serve.steps import (decode_shardings, make_decode_step,
                                make_prefill_step, serve_param_specs)
+from repro.serve.subscribe import (apply_delta, apply_message, apply_resync,
+                                   make_apply_delta)
 
-__all__ = ["decode_shardings", "make_decode_step", "make_prefill_step",
-           "serve_param_specs"]
+__all__ = ["DELTA", "RESYNC", "DeltaMessage", "apply_delta", "apply_message",
+           "apply_resync", "decode_shardings", "encode_delta",
+           "init_publisher_state", "make_apply_delta", "make_decode_step",
+           "make_prefill_step", "message_bits", "publish",
+           "publisher_config", "serve_param_specs"]

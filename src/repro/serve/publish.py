@@ -1,0 +1,148 @@
+"""Train-to-serve compressed weight-delta streaming — publisher side
+(DESIGN.md §13).
+
+The trainer keeps a *published view* ``pub`` of its parameters — a
+``(model_size, d_row_total)`` bucket under the same :class:`BucketLayout`
+geometry the gradient wire uses (typically ``rebudget_layout`` of the
+train layout at a serve-side ratio).  Every publish tick encodes the
+weight *delta* ``params - pub`` through the fixed-capacity sentinel
+codec with its own error-feedback residual:
+
+    u = P - pub            (P = pack_grads(layout, params))
+    wire = top-k(u + resid);  resid' = (u + resid) - decode(wire)
+    pub' = pub + decode(wire)
+
+so ``pub' + resid' == P`` up to float addition order, and — the load-
+bearing invariant — ``pub`` always equals the packed replica params
+BITWISE, because the replica applies the *same* ``codec.decode_add`` to
+the *same* wire pairs.  Every ``resync_every``-th publish (and always at
+``seq == 0``) ships the dense bucket instead and zeroes the residual,
+making replica params exactly equal to trainer params at that epoch.
+
+The publisher is fixed-k only: adaptive density and momentum correction
+are gradient-stream semantics (they need the optimizer loop's feedback),
+so a :class:`CompressionConfig` carrying either is rejected loudly.
+``publish`` itself branches on the host sequence number and is NOT
+jittable; the delta encode path (:func:`encode_delta`) is, and is jitted
+once per (layout, config).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import codec
+from repro.core.compression import CompressionConfig, as_config
+from repro.dist.aggregate import bucket_compress
+from repro.dist.layout import BucketLayout, pack_grads
+
+# DeltaMessage.kind values
+RESYNC = 0   # dense full bucket; replica := trainer exactly
+DELTA = 1    # one (values, indices) codec pair over the whole bucket
+
+
+class DeltaMessage(NamedTuple):
+    """One publish on the wire.
+
+    ``kind == DELTA``: ``values``/``indices`` are a ``(model_size,
+    k_cap_total)`` sentinel-codec pair with bucket-global indices
+    (``bucket is None``).  ``kind == RESYNC``: ``bucket`` is the dense
+    ``(model_size, d_row_total)`` packed params (codec pair ``None``).
+    """
+    seq: int
+    kind: int
+    values: Optional[jax.Array]
+    indices: Optional[jax.Array]
+    bucket: Optional[jax.Array]
+
+
+def message_bits(msg: DeltaMessage) -> int:
+    """Wire footprint of one message in bits (values + int32 indices for
+    a delta; the dense bucket for a resync) — the serve-side counterpart
+    of ``BucketLayout.pair_bits``."""
+    if msg.kind == RESYNC:
+        return int(msg.bucket.size) * msg.bucket.dtype.itemsize * 8
+    val_bits = msg.values.dtype.itemsize * 8
+    return int(msg.values.size) * (val_bits + 32)
+
+
+def publisher_config(config) -> CompressionConfig:
+    """Validate a config for the publisher (fixed-k, non-dense)."""
+    config = as_config(config)
+    if config.dense:
+        raise ValueError("publisher needs a sparse CompressionConfig "
+                         "(compressor='none' has no delta stream)")
+    if config.density_policy is not None:
+        raise ValueError("publisher is fixed-k only: adaptive density is "
+                         "a gradient-stream feature (drop density_policy)")
+    if config.momentum_correction > 0:
+        raise ValueError("publisher is fixed-k only: momentum correction "
+                         "is a gradient-stream feature (set it to 0)")
+    return config
+
+
+def init_publisher_state(layout: BucketLayout, dtype=jnp.float32) -> dict:
+    """``{"pub", "resid", "seq"}`` — the published view, the delta-stream
+    EF residual (both ``(model_size, d_row_total)`` buckets) and the host
+    publish counter.  ``seq == 0`` forces the first publish to resync, so
+    a fresh publisher never streams against an unseeded view."""
+    shape = (layout.model_size, layout.d_row_total)
+    return {"pub": jnp.zeros(shape, dtype),
+            "resid": jnp.zeros(shape, dtype),
+            "seq": jnp.zeros((), jnp.int32)}
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3))
+def encode_delta(state: dict, P: jax.Array, layout: BucketLayout,
+                 config: CompressionConfig, key):
+    """One jitted delta encode against packed params ``P``.
+
+    Returns ``(new_state, (values, indices))``.  ``bucket_compress``
+    sees ``u = P - pub`` through the standard EF identity (``G = u -
+    resid_carried`` with ``E = resid``), so ``decode(wire) + resid' ==
+    P - pub`` exactly as the gradient wire conserves Eq. 2."""
+    pub, resid = state["pub"], state["resid"]
+    G = P - pub - resid
+    values, indices, new_resid, _ = bucket_compress(
+        G, resid, layout, config.spec, key,
+        codec_dtype=config.codec_dtype, backend=config.backend)
+    new_pub = jax.vmap(codec.decode_add)(
+        pub, values.astype(pub.dtype), indices)
+    return ({"pub": new_pub, "resid": new_resid.astype(resid.dtype),
+             "seq": state["seq"] + 1},
+            (values, indices))
+
+
+def publish(state: dict, params, layout: BucketLayout, config, key=None,
+            *, resync_every: int = 0):
+    """One publish tick: ``(new_state, DeltaMessage)``.
+
+    Resyncs (dense bucket, residual zeroed) at ``seq == 0`` and, when
+    ``resync_every > 0``, at every ``seq % resync_every == 0`` — the
+    epochs where replica params are bit-equal to trainer params.  All
+    other ticks stream a compressed delta, RNG-decorrelated per tick by
+    folding ``seq`` into ``key``."""
+    config = publisher_config(config)
+    dtype = state["pub"].dtype
+    # host-fetch before packing: pack_grads concatenates, and eager
+    # concatenate over the partially-replicated shardings a 2-D-sharded
+    # train state carries miscomputes on this jax version (values double
+    # through the last_tile_dim_replicate layout).  The publisher is a
+    # host-side streaming seam, so the fetch is the honest data path —
+    # device_get is a no-op on host arrays.
+    P = pack_grads(layout, jax.device_get(params), dtype)
+    seq = int(state["seq"])
+    if seq == 0 or (resync_every > 0 and seq % resync_every == 0):
+        new_state = {"pub": P, "resid": jnp.zeros_like(state["resid"]),
+                     "seq": state["seq"] + 1}
+        return new_state, DeltaMessage(seq=seq, kind=RESYNC, values=None,
+                                       indices=None, bucket=P)
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    new_state, (values, indices) = encode_delta(
+        state, P, layout, config, jax.random.fold_in(key, seq))
+    return new_state, DeltaMessage(seq=seq, kind=DELTA, values=values,
+                                   indices=indices, bucket=None)

@@ -1,0 +1,79 @@
+"""Train-to-serve weight-delta streaming — replica side (DESIGN.md §13).
+
+The serving replica holds live params (possibly sharded per
+``serve_param_specs``) and ingests :class:`DeltaMessage`s between decode
+steps.  A delta is O(k): per leaf segment, the ``[cap_off, cap_off +
+k_cap)`` columns of the wire pair are rebased to leaf-local indices
+(sentinel-aware) and scatter-added into the leaf's row view with the
+SAME ``codec.decode_add`` the publisher used to advance ``pub`` — which
+is what makes trainer ``pub`` and packed replica params bitwise equal at
+every publish when the leaf dtype matches the stream dtype.  A resync
+replaces the whole tree via ``unpack_tree`` — replica == trainer
+exactly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import codec
+from repro.dist.layout import BucketLayout, unpack_tree
+from repro.serve.publish import DELTA, RESYNC, DeltaMessage
+from repro.serve.steps import serve_param_specs
+
+
+def apply_delta(params, layout: BucketLayout, values: jax.Array,
+                indices: jax.Array):
+    """Scatter-add one ``(model_size, k_cap_total)`` codec pair into the
+    param tree.  Accumulation runs in ``promote_types(leaf, values)`` and
+    casts back to the leaf dtype — bit-exact against the publisher's
+    ``pub`` when leaf dtype == pub dtype (the serve-stream default)."""
+    leaves = jax.tree.leaves(params)
+    if len(leaves) != len(layout.segments):
+        raise ValueError(f"tree has {len(leaves)} leaves, layout has "
+                         f"{len(layout.segments)} segments")
+    new_leaves = []
+    for seg, leaf in zip(layout.segments, leaves):
+        v = values[:, seg.cap_off:seg.cap_off + seg.k_cap]
+        i = codec.offset_indices(
+            indices[:, seg.cap_off:seg.cap_off + seg.k_cap], -seg.row_off)
+        acc = jnp.promote_types(leaf.dtype, values.dtype)
+        flat = jnp.pad(leaf.reshape(-1), (0, seg.d_pad - seg.size))
+        rows = flat.astype(acc).reshape(layout.model_size, seg.d_row)
+        rows = jax.vmap(codec.decode_add)(rows, v.astype(acc), i)
+        new_leaves.append(rows.reshape(-1)[:seg.size].reshape(seg.shape)
+                          .astype(leaf.dtype))
+    return jax.tree.unflatten(jax.tree.structure(params), new_leaves)
+
+
+def apply_resync(params, layout: BucketLayout, bucket: jax.Array):
+    """Replace the tree with the dense published bucket (bit-exact)."""
+    return unpack_tree(layout, bucket, like=params)
+
+
+def apply_message(params, layout: BucketLayout, msg: DeltaMessage):
+    """Dispatch one :class:`DeltaMessage` onto the replica params."""
+    if msg.kind == RESYNC:
+        return apply_resync(params, layout, msg.bucket)
+    if msg.kind == DELTA:
+        return apply_delta(params, layout, msg.values, msg.indices)
+    raise ValueError(f"unknown DeltaMessage kind {msg.kind!r}")
+
+
+def make_apply_delta(layout: BucketLayout, mesh, params, mode: str = "2d"):
+    """Jitted ``apply(params, values, indices)`` with the serve param
+    shardings pinned on the OUTPUT — the in-loop form the continuous-
+    batching server calls between decode steps.  Inputs are accepted in
+    whatever layout they arrive (a fresh resync leaves params
+    replicated; the wire pair is replicated host data), and the result
+    lands in ``serve_param_specs`` placement ready for the next decode
+    step."""
+    pspecs = serve_param_specs(params, mesh, mode=mode)
+    named = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                         is_leaf=lambda x: isinstance(x, P))
+
+    def fn(p, values, indices):
+        return apply_delta(p, layout, values, indices)
+
+    return jax.jit(fn, out_shardings=named)

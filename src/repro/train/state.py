@@ -19,28 +19,55 @@ a checkpoint written under any chunk count resumes under any other
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import adaptk
+from repro.core.compression import CompressionConfig, as_config
 from repro.dist.aggregate import init_residuals, resolve_strategy
 from repro.dist.layout import BucketLayout, init_flat_residual
 from repro.optim import Optimizer
 
+# Legacy init_train_state kwargs the deprecation shim still accepts.
+_LEGACY_STATE_KEYS = ("strategy", "hierarchical", "density_policy")
+
+
+def _state_config_from_legacy(legacy: dict) -> CompressionConfig:
+    unknown = set(legacy) - set(_LEGACY_STATE_KEYS)
+    if unknown:
+        raise TypeError("init_train_state got unexpected kwargs "
+                        f"{sorted(unknown)}")
+    warnings.warn(
+        "init_train_state: loose compression kwargs "
+        f"({sorted(legacy)}) are deprecated; pass "
+        "compression=core.compression.CompressionConfig(...) instead",
+        DeprecationWarning, stacklevel=3)
+    return CompressionConfig(
+        strategy=resolve_strategy(legacy.get("strategy", "allgather"),
+                                  legacy.get("hierarchical", False)),
+        density_policy=legacy.get("density_policy"))
+
 
 def init_train_state(params, optimizer: Optimizer, *, workers: int,
-                     model_size: int, with_residual: bool = True,
-                     hierarchical: bool = False, strategy: str = "allgather",
+                     model_size: int,
+                     compression: Optional[CompressionConfig] = None,
+                     with_residual: bool = True,
                      resid_dtype=jnp.float32,
-                     density_policy=None,
-                     layout: Optional[BucketLayout] = None) -> Dict[str, Any]:
-    """``strategy="hierarchical"`` (or the legacy ``hierarchical=True``)
-    allocates the second residual ``resid2`` the two-level path
-    compresses the pod-mean against; ``"allgather"`` and ``"gtopk"``
-    need only the per-worker ``resid`` (the gTop-k merge drops are
-    credited into it directly — dist/aggregate.py).
+                     layout: Optional[BucketLayout] = None,
+                     **legacy) -> Dict[str, Any]:
+    """``compression`` (a ``core.compression.CompressionConfig``) decides
+    which auxiliary buffers the state carries.
+    ``strategy="hierarchical"`` OR ``momentum_correction > 0`` allocates
+    the second residual ``resid2`` (the two-level pod-mean residual /
+    the DGC local-momentum buffer — dist/aggregate.py); ``"allgather"``
+    and ``"gtopk"`` need only the per-worker ``resid`` (the gTop-k merge
+    drops are credited into it directly).  ``compressor="none"`` (Dense
+    SGD) allocates no residuals at all.  The pre-config loose kwargs
+    (``strategy=``, ``hierarchical=``, ``density_policy=``) still work
+    but forward through a ``DeprecationWarning`` shim.
 
     ``layout`` (a ``dist/layout.BucketLayout``) switches residual
     storage to the flat bucketed buffers the single-collective
@@ -49,20 +76,31 @@ def init_train_state(params, optimizer: Optimizer, *, workers: int,
     checkpoints load into it through the ``checkpoint/npz.py`` migration
     shim.
 
-    ``density_policy`` additionally allocates the adaptive-density
-    controller state ``adaptk`` (the EMA'd per-leaf allocation signal,
-    replicated across workers — core/adaptk.py, DESIGN.md §9); when the
-    policy enables a global-k controller (``global_policy != "none"``,
-    DESIGN.md §12) the state also carries the norm-decay scalars
-    ``gnorm``/``gnorm0``.  It checkpoints with the rest of the state
-    (pre-globalk checkpoints load through the ``checkpoint/npz.py``
-    zero-fill shim — the scalars self-seed on the next step)."""
+    ``compression.density_policy`` additionally allocates the
+    adaptive-density controller state ``adaptk`` (the EMA'd per-leaf
+    allocation signal, replicated across workers — core/adaptk.py,
+    DESIGN.md §9); when the policy enables a global-k controller
+    (``global_policy != "none"``, DESIGN.md §12) the state also carries
+    the norm-decay scalars ``gnorm``/``gnorm0``.  It checkpoints with
+    the rest of the state (pre-globalk checkpoints load through the
+    ``checkpoint/npz.py`` zero-fill shim — the scalars self-seed on the
+    next step)."""
+    if legacy:
+        if compression is not None:
+            raise TypeError(
+                "init_train_state: legacy kwargs "
+                f"{sorted(legacy)} cannot be combined with a "
+                "CompressionConfig — fold them in via "
+                "compression.replace(...)")
+        compression = _state_config_from_legacy(legacy)
+    compression = as_config(compression)
+    density_policy = compression.density_policy
     state: Dict[str, Any] = {
         "params": params,
         "opt": optimizer.init(params),
         "step": jnp.zeros((), jnp.int32),
     }
-    if with_residual:
+    if with_residual and not compression.dense:
         if layout is not None:
             if layout.model_size != model_size:
                 raise ValueError(
@@ -78,7 +116,8 @@ def init_train_state(params, optimizer: Optimizer, *, workers: int,
             one = init_residuals(params, model_size, resid_dtype)
         stackw = lambda e: jnp.zeros((workers,) + e.shape, e.dtype)  # noqa: E731
         state["resid"] = jax.tree.map(stackw, one)
-        if resolve_strategy(strategy, hierarchical) == "hierarchical":
+        if (compression.strategy == "hierarchical"
+                or compression.momentum_correction > 0):
             state["resid2"] = jax.tree.map(stackw, one)
         if density_policy is not None:
             state["adaptk"] = adaptk.init_controller_state(

@@ -17,13 +17,14 @@ Structure (DESIGN.md §4):
 """
 from __future__ import annotations
 
+import warnings
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.compressors import get_compressor
+from repro.core.compression import CompressionConfig, as_config
 from repro.dist import aggregate, compat
 from repro.dist.layout import build_chunk_plan
 from repro.dist.sharding import batch_specs, param_spec, train_state_specs
@@ -90,61 +91,84 @@ def _chunk_grad_seam(groups):
     return seam
 
 
-def make_train_step(cfg, mesh, optimizer: Optimizer, lr_fn: Callable,
-                    *, compressor: Optional[str] = "gaussiank",
-                    ratio: float = 0.001, strategy: str = "allgather",
-                    hierarchical: bool = False,
-                    remat: bool = True, seed: int = 0,
-                    loss_fn: Optional[Callable] = None, codec_dtype=None,
-                    momentum_correction: float = 0.0,
-                    backend: str = "auto", density_policy=None,
-                    layout=None, chunks: int = 1):
-    """Returns (step_fn, in_specs, out_specs).  ``step_fn(state, batch) ->
-    (state, metrics)`` is already jit+shard_map wrapped for ``mesh``.
-    ``compressor=None``/"none" gives the Dense-SGD baseline.
+# Legacy make_train_step kwargs the deprecation shim still accepts; each
+# maps onto one CompressionConfig field (hierarchical via resolve_strategy).
+_LEGACY_STEP_KEYS = ("compressor", "ratio", "strategy", "hierarchical",
+                     "codec_dtype", "momentum_correction", "backend",
+                     "density_policy", "chunks")
 
-    ``strategy`` selects the sparse wire pattern — ``"allgather"``,
-    ``"gtopk"`` or ``"hierarchical"`` (see dist/aggregate.py; the legacy
-    ``hierarchical=True`` flag maps to ``strategy="hierarchical"``).
+
+def _step_config_from_legacy(legacy: dict) -> CompressionConfig:
+    unknown = set(legacy) - set(_LEGACY_STEP_KEYS)
+    if unknown:
+        raise TypeError("make_train_step got unexpected kwargs "
+                        f"{sorted(unknown)}")
+    warnings.warn(
+        "make_train_step: loose compression kwargs "
+        f"({sorted(legacy)}) are deprecated; pass "
+        "compression=core.compression.CompressionConfig(...) instead",
+        DeprecationWarning, stacklevel=3)
+    return CompressionConfig(
+        compressor=legacy.get("compressor", "gaussiank"),
+        ratio=legacy.get("ratio", 0.001),
+        strategy=aggregate.resolve_strategy(
+            legacy.get("strategy", "allgather"),
+            legacy.get("hierarchical", False)),
+        codec_dtype=legacy.get("codec_dtype"),
+        momentum_correction=legacy.get("momentum_correction", 0.0),
+        backend=legacy.get("backend", "auto"),
+        density_policy=legacy.get("density_policy"),
+        chunks=legacy.get("chunks", 1))
+
+
+def make_train_step(cfg, mesh, optimizer: Optimizer, lr_fn: Callable,
+                    *, compression: Optional[CompressionConfig] = None,
+                    remat: bool = True, seed: int = 0,
+                    loss_fn: Optional[Callable] = None,
+                    layout=None, **legacy):
+    """Returns ``step_fn(state, batch) -> (state, metrics)``, already
+    jit+shard_map wrapped for ``mesh``.
+
+    ``compression`` (a ``core.compression.CompressionConfig``) is the one
+    value describing what to compress with and how to move it: compressor
+    name (``"none"`` gives the Dense-SGD baseline), density ratio, wire
+    strategy, codec dtype, DGC momentum correction, EF backend, adaptive
+    ``DensityPolicy`` (DESIGN.md §9) and chunk count.  ``None`` means the
+    default config.  The pre-config loose kwargs (``compressor=``,
+    ``ratio=``, ``strategy=``, ``hierarchical=``, ...) still work but
+    forward through a ``DeprecationWarning`` shim.
 
     ``layout`` (a ``dist/layout.BucketLayout`` built from the SAME
-    params/ratio/compressor/density-policy configuration) dispatches the
-    aggregation through the flat bucketed pipeline
-    (``aggregate_bucketed``, DESIGN.md §10): the state's residuals are
-    the flat buffers of ``init_train_state(..., layout=...)`` and every
-    wire level is one collective per step instead of one per leaf.
-    ``layout=None`` keeps the per-leaf loop (bit-identical results).
+    params + compression configuration) dispatches the aggregation
+    through the flat bucketed pipeline (``aggregate_bucketed``,
+    DESIGN.md §10): the state's residuals are the flat buffers of
+    ``init_train_state(..., layout=...)`` and every wire level is one
+    collective per step instead of one per leaf.  ``layout=None`` keeps
+    the per-leaf loop (bit-identical results).
 
-    ``backend`` selects the per-worker compression pipeline:
-    ``"auto"`` (fused Pallas path for compressors that support it,
-    DESIGN.md §8), ``"fused"`` (forced; raises on unsupported
-    compressors) or ``"reference"`` (jnp oracle).
-
-    ``density_policy`` (``core.adaptk.DensityPolicy``) turns on adaptive
-    layer-wise density (DESIGN.md §9): the per-leaf budgets become
-    traced per-step quantities steered by the pass-A gradient moments;
-    the EMA controller state lives in ``state["adaptk"]`` (allocate it
-    via ``init_train_state(..., density_policy=...)``).
-
-    ``chunks`` (with a ``layout``) switches to the chunked overlapped
-    schedule (DESIGN.md §11): the bucket is split into N leaf-aligned
-    chunk groups, a custom-vjp seam releases each group's gradients as
-    one unit during the backward pass, and
+    ``compression.chunks > 1`` (with a ``layout``) switches to the
+    chunked overlapped schedule (DESIGN.md §11): the bucket is split
+    into N leaf-aligned chunk groups, a custom-vjp seam releases each
+    group's gradients as one unit during the backward pass, and
     ``aggregate_bucketed_chunked`` issues one compress+collective chain
     per group — bit-identical results, N collectives per wire level.
-    ``chunks=1`` (default) is exactly today's unchunked step.  The
-    TrainState is chunk-count independent (the flat residual layout
-    never changes), so checkpoints move freely across ``chunks``
-    settings."""
+    The TrainState is chunk-count independent (the flat residual layout
+    never changes), so checkpoints move freely across chunk settings."""
+    if legacy:
+        if compression is not None:
+            raise TypeError(
+                "make_train_step: legacy kwargs "
+                f"{sorted(legacy)} cannot be combined with a "
+                "CompressionConfig — fold them in via "
+                "compression.replace(...)")
+        compression = _step_config_from_legacy(legacy)
+    compression = as_config(compression)
     data_axes = data_axes_of(mesh)
-    strategy = aggregate.resolve_strategy(strategy, hierarchical)
     joint = _joint(data_axes)
     msize = model_axis_size(mesh)
-    dense = compressor in (None, "none")
-    if dense and density_policy is not None:
-        raise ValueError("density_policy steers the sparse budget; it has "
-                         "no meaning for the Dense-SGD baseline")
-    spec = None if dense else get_compressor(compressor)
+    dense = compression.dense
+    spec = compression.spec
+    density_policy = compression.density_policy
     if layout is not None and not dense:
         # fail at factory time, not deep inside the traced step
         if layout.model_size != msize:
@@ -153,22 +177,21 @@ def make_train_step(cfg, mesh, optimizer: Optimizer, lr_fn: Callable,
         if layout.spec_name != spec.name:
             raise ValueError(f"layout compressor {layout.spec_name!r} != "
                              f"{spec.name!r}")
-        if abs(layout.ratio - float(ratio)) > 1e-12:
-            raise ValueError(f"layout ratio {layout.ratio} != {ratio}")
-        if layout.adaptive != (density_policy is not None):
+        if abs(layout.ratio - float(compression.ratio)) > 1e-12:
+            raise ValueError(
+                f"layout ratio {layout.ratio} != {compression.ratio}")
+        if layout.adaptive != compression.adaptive:
             raise ValueError("layout density mode does not match "
                              "density_policy; rebuild the layout")
-    if chunks < 1:
-        raise ValueError(f"chunks must be >= 1, got {chunks}")
     chunk_plan = None
-    if chunks > 1:
+    if compression.chunks > 1:
         if dense or layout is None:
             raise ValueError(
                 "chunks > 1 needs the bucketed sparse pipeline: pass "
                 "layout= (the chunked schedule re-dispatches the flat "
                 "wire block; the per-leaf and Dense-SGD paths have no "
                 "bucket to chunk)")
-        chunk_plan = build_chunk_plan(layout, chunks)
+        chunk_plan = build_chunk_plan(layout, compression.chunks)
     seam = (_chunk_grad_seam(chunk_plan.groups)
             if chunk_plan is not None else None)
     base_key = jax.random.PRNGKey(seed)
@@ -210,30 +233,25 @@ def make_train_step(cfg, mesh, optimizer: Optimizer, lr_fn: Callable,
                       if "resid2" in state else None)
             key = jax.random.fold_in(base_key, state["step"])
             key = jax.random.fold_in(key, worker_index(data_axes))
-            # one kwargs set for both dispatch granularities — they
-            # differ only in the positional head (layout vs ratio/msize)
-            agg_kw = dict(strategy=strategy, resid2=resid2,
-                          world=data_world_size(mesh),
-                          codec_dtype=codec_dtype,
-                          momentum_correction=momentum_correction,
-                          backend=backend, density_policy=density_policy,
+            # runtime-state kwargs shared by all dispatch granularities —
+            # everything *configuration* already rides in ``compression``
+            agg_kw = dict(resid2=resid2, world=data_world_size(mesh),
                           adapt_state=state.get("adaptk"),
                           step=state["step"])
             if chunk_plan is not None:
-                agg, nr, nr2, new_adapt, agg_metrics = \
-                    aggregate.aggregate_bucketed_chunked(
-                        grads, resid, layout, chunk_plan, spec,
-                        data_axes, "model", key, **agg_kw)
+                res = aggregate.aggregate_bucketed_chunked(
+                    grads, resid, layout, chunk_plan, compression,
+                    data_axes, "model", key, **agg_kw)
             elif layout is not None:
-                agg, nr, nr2, new_adapt, agg_metrics = \
-                    aggregate.aggregate_bucketed(
-                        grads, resid, layout, spec, data_axes, "model",
-                        key, **agg_kw)
+                res = aggregate.aggregate_bucketed(
+                    grads, resid, layout, compression, data_axes, "model",
+                    key, **agg_kw)
             else:
-                agg, nr, nr2, new_adapt, agg_metrics = \
-                    aggregate.aggregate_compressed(
-                        grads, resid, spec, ratio, data_axes, "model",
-                        msize, key, **agg_kw)
+                res = aggregate.aggregate_compressed(
+                    grads, resid, compression, data_axes, "model",
+                    msize, key, **agg_kw)
+            agg, nr, nr2 = res.agg, res.resid, res.resid2
+            new_adapt, agg_metrics = res.adapt_state, res.metrics
             new_resid = jax.tree.map(lambda e: e[None], nr)
             new_resid2 = (jax.tree.map(lambda e: e[None], nr2)
                           if "resid2" in state else None)

@@ -6,6 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import codec, get_compressor
+from repro.core.compression import CompressionConfig
 from repro.launch.mesh import data_world_size, make_mesh, model_axis_size
 from repro.models import ModelConfig, init_params, loss_fn
 from repro.optim import constant, sgd_momentum
@@ -34,8 +35,9 @@ def check_eq2():
 
     params = init_params(CFG, jax.random.PRNGKey(0))
     state = init_train_state(params, opt, workers=W, model_size=msize)
-    step = make_train_step(CFG, mesh, opt, constant(lr), compressor="topk",
-                           ratio=ratio, remat=False)
+    step = make_train_step(
+        CFG, mesh, opt, constant(lr), remat=False,
+        compression=CompressionConfig(compressor="topk", ratio=ratio))
     batch = _batch()
     for _ in range(steps):
         state, m = step(state, batch)
@@ -122,12 +124,14 @@ def check_gtopk():
                    for w in range(W)])
     e = 0.001 * jax.random.normal(jax.random.PRNGKey(99), (W, d_pad))
 
+    config = CompressionConfig(compressor="topk", ratio=ratio,
+                               strategy="gtopk")
+
     def body(g_loc, e_loc):
-        agg, ne, _, _, metrics = aggregate.aggregate_compressed(
-            {"w": g_loc[0]}, {"w": e_loc[0]}, spec, ratio, ("data",),
-            "model", msize, jax.random.PRNGKey(7), strategy="gtopk",
-            world=W)
-        return agg["w"], ne["w"][None], metrics
+        res = aggregate.aggregate_compressed(
+            {"w": g_loc[0]}, {"w": e_loc[0]}, config, ("data",),
+            "model", msize, jax.random.PRNGKey(7), world=W)
+        return res.agg["w"], res.resid["w"][None], res.metrics
 
     sm = compat.shard_map(body, mesh=mesh,
                           in_specs=(P("data"), P("data")),
@@ -161,9 +165,9 @@ def check_gtopk():
     lr, steps = 0.05, 3
     params = init_params(CFG, jax.random.PRNGKey(0))
     state = init_train_state(params, opt, workers=W, model_size=msize,
-                             strategy="gtopk")
-    step = make_train_step(CFG, mesh, opt, constant(lr), compressor="topk",
-                           ratio=ratio, remat=False, strategy="gtopk")
+                             compression=config)
+    step = make_train_step(CFG, mesh, opt, constant(lr), remat=False,
+                           compression=config)
     batch = _batch()
     for _ in range(steps):
         state, m = step(state, batch)
@@ -215,10 +219,11 @@ def check_dense():
     opt = sgd_momentum(0.9)
     lr, steps = 0.05, 3
     params = init_params(CFG, jax.random.PRNGKey(0))
+    dense_cfg = CompressionConfig(compressor="none")
     state = init_train_state(params, opt, workers=8, model_size=2,
-                             with_residual=False)
-    step = make_train_step(CFG, mesh, opt, constant(lr), compressor="none",
-                           remat=False)
+                             compression=dense_cfg)
+    step = make_train_step(CFG, mesh, opt, constant(lr), remat=False,
+                           compression=dense_cfg)
     batch = _batch()
     for _ in range(steps):
         state, m = step(state, batch)
@@ -274,16 +279,20 @@ def check_adaptk():
         data_axes = tuple(a for a in axes_names if a != "model")
         joint = data_axes if len(data_axes) > 1 else data_axes[0]
 
+        config = CompressionConfig(compressor="topk", ratio=ratio,
+                                   strategy=strategy, backend="reference",
+                                   density_policy=policy)
+
         def body(g_loc, e_loc, *r2_loc):
             r2t = {"w": r2_loc[0][0]} if r2_loc else None
-            agg, ne, nr2, _, metrics = aggregate.aggregate_compressed(
-                {"w": g_loc[0]}, {"w": e_loc[0]}, spec, ratio, data_axes,
-                "model", msize, jax.random.PRNGKey(7), strategy=strategy,
-                resid2=r2t, world=W, backend="reference",
-                density_policy=policy, step=jnp.int32(0))
-            outs = (agg["w"], ne["w"][None], metrics["k_total"])
+            res = aggregate.aggregate_compressed(
+                {"w": g_loc[0]}, {"w": e_loc[0]}, config, data_axes,
+                "model", msize, jax.random.PRNGKey(7),
+                resid2=r2t, world=W, step=jnp.int32(0))
+            outs = (res.agg["w"], res.resid["w"][None],
+                    res.metrics["k_total"])
             if r2_loc:
-                outs += (nr2["w"][None],)
+                outs += (res.resid2["w"][None],)
             return outs
 
         in_specs = (P(joint), P(joint)) + ((P(joint),) if with_r2 else ())
@@ -399,15 +408,18 @@ def check_rtopk():
         data_axes = tuple(a for a in axes_names if a != "model")
         joint = data_axes if len(data_axes) > 1 else data_axes[0]
 
+        config = CompressionConfig(compressor="rtopk", ratio=ratio,
+                                   strategy=strategy, backend="reference")
+
         def body(g_loc, e_loc, *r2_loc):
             r2t = {"w": r2_loc[0][0]} if r2_loc else None
-            agg, ne, nr2, _, _m = aggregate.aggregate_compressed(
-                {"w": g_loc[0]}, {"w": e_loc[0]}, spec, ratio, data_axes,
-                "model", msize, jax.random.PRNGKey(7), strategy=strategy,
-                resid2=r2t, world=W, backend="reference")
-            outs = (agg["w"], ne["w"][None])
+            res = aggregate.aggregate_compressed(
+                {"w": g_loc[0]}, {"w": e_loc[0]}, config, data_axes,
+                "model", msize, jax.random.PRNGKey(7),
+                resid2=r2t, world=W)
+            outs = (res.agg["w"], res.resid["w"][None])
             if r2_loc:
-                outs += (nr2["w"][None],)
+                outs += (res.resid2["w"][None],)
             return outs
 
         in_specs = (P(joint), P(joint)) + ((P(joint),) if with_r2 else ())
@@ -488,13 +500,17 @@ def check_rtopk():
     mesh = make_mesh((4, 2), ("data", "model"))
     W = 4
 
+    gk_config = CompressionConfig(compressor="rtopk", ratio=ratio,
+                                  backend="reference",
+                                  density_policy=policy)
+
     def body(g_loc, e_loc, st_loc):
-        agg, ne, _, new_st, m = aggregate.aggregate_compressed(
-            {"w": g_loc[0]}, {"w": e_loc[0]}, spec, ratio, ("data",),
-            "model", msize, jax.random.PRNGKey(7), strategy="allgather",
-            world=W, backend="reference", density_policy=policy,
+        res = aggregate.aggregate_compressed(
+            {"w": g_loc[0]}, {"w": e_loc[0]}, gk_config, ("data",),
+            "model", msize, jax.random.PRNGKey(7), world=W,
             adapt_state=st_loc, step=jnp.int32(0))
-        return agg["w"], ne["w"][None], new_st, m["k_total"]
+        return (res.agg["w"], res.resid["w"][None], res.adapt_state,
+                res.metrics["k_total"])
 
     run = jax.jit(compat.shard_map(
         body, mesh=mesh, in_specs=(P("data"), P("data"), P()),
@@ -583,27 +599,30 @@ def check_bucketed():
         r2_flat = (jnp.asarray(pack_residual_arrays(
             layout, [np.asarray(x) for x in jax.tree.leaves(r2_tree)]))
             if with_r2 else None)
-        kw = dict(strategy=strategy, world=W, backend=backend,
-                  momentum_correction=momentum, density_policy=policy,
-                  step=jnp.int32(0) if policy else None)
+        config = CompressionConfig(compressor=comp, ratio=ratio,
+                                   strategy=strategy, backend=backend,
+                                   momentum_correction=momentum,
+                                   density_policy=policy)
+        kw = dict(world=W, step=jnp.int32(0) if policy else None)
 
         def per_leaf(g, e, *r2s):
             r2 = jax.tree.map(lambda x: x[0], r2s[0]) if r2s else None
-            agg, ne, nr2, _, m = aggregate.aggregate_compressed(
+            res = aggregate.aggregate_compressed(
                 jax.tree.map(lambda x: x[0], g),
-                jax.tree.map(lambda x: x[0], e), spec, ratio, data_axes,
+                jax.tree.map(lambda x: x[0], e), config, data_axes,
                 "model", msize, jax.random.PRNGKey(7), resid2=r2, **kw)
-            out = (agg, jax.tree.map(lambda x: x[None], ne), m)
-            return out + ((jax.tree.map(lambda x: x[None], nr2),)
+            out = (res.agg, jax.tree.map(lambda x: x[None], res.resid),
+                   res.metrics)
+            return out + ((jax.tree.map(lambda x: x[None], res.resid2),)
                           if r2s else ())
 
         def bucketed(g, e, *r2s):
-            agg, ne, nr2, _, m = aggregate.aggregate_bucketed(
-                jax.tree.map(lambda x: x[0], g), e[0], layout, spec,
+            res = aggregate.aggregate_bucketed(
+                jax.tree.map(lambda x: x[0], g), e[0], layout, config,
                 data_axes, "model", jax.random.PRNGKey(7),
                 resid2=r2s[0][0] if r2s else None, **kw)
-            out = (agg, ne[None], m)
-            return out + ((nr2[None],) if r2s else ())
+            out = (res.agg, res.resid[None], res.metrics)
+            return out + ((res.resid2[None],) if r2s else ())
 
         sm1 = compat.shard_map(
             per_leaf, mesh=mesh, in_specs=(P(joint),) * (2 + with_r2),
@@ -732,25 +751,26 @@ def check_chunked():
         e_flat = 1e-3 * jax.random.normal(
             jax.random.fold_in(key, 2), (W, layout.flat_size))
         r2_flat = 0.5 * e_flat if with_r2 else None
-        kw = dict(strategy=strategy, world=W, backend=backend,
-                  density_policy=policy,
-                  step=jnp.int32(0) if policy else None)
+        config = CompressionConfig(compressor=comp, ratio=ratio,
+                                   strategy=strategy, backend=backend,
+                                   density_policy=policy)
+        kw = dict(world=W, step=jnp.int32(0) if policy else None)
 
         def unchunked(g, e, *r2s):
-            agg, ne, nr2, _, m = aggregate.aggregate_bucketed(
-                jax.tree.map(lambda x: x[0], g), e[0], layout, spec,
+            res = aggregate.aggregate_bucketed(
+                jax.tree.map(lambda x: x[0], g), e[0], layout, config,
                 data_axes, "model", jax.random.PRNGKey(7),
                 resid2=r2s[0][0] if r2s else None, **kw)
-            out = (agg, ne[None], m)
-            return out + ((nr2[None],) if r2s else ())
+            out = (res.agg, res.resid[None], res.metrics)
+            return out + ((res.resid2[None],) if r2s else ())
 
         def chunked(g, e, *r2s):
-            agg, ne, nr2, _, m = aggregate.aggregate_bucketed_chunked(
-                jax.tree.map(lambda x: x[0], g), e[0], layout, plan, spec,
+            res = aggregate.aggregate_bucketed_chunked(
+                jax.tree.map(lambda x: x[0], g), e[0], layout, plan, config,
                 data_axes, "model", jax.random.PRNGKey(7),
                 resid2=r2s[0][0] if r2s else None, **kw)
-            out = (agg, ne[None], m)
-            return out + ((nr2[None],) if r2s else ())
+            out = (res.agg, res.resid[None], res.metrics)
+            return out + ((res.resid2[None],) if r2s else ())
 
         specs = dict(
             in_specs=(P(joint),) * (2 + with_r2),
@@ -832,6 +852,100 @@ def check_chunked():
     print("CHUNKED OK")
 
 
+def check_serve():
+    """Train-to-serve delta streaming (DESIGN.md §13) against a REAL
+    training run on the (4,2) mesh: the trainer publishes after every
+    step (resync every 2nd publish), a serving replica ingests each
+    message, and the publisher invariants are checked at every tick:
+
+    * replica params BIT-equal to trainer params at every full-resync
+      epoch (the acceptance invariant);
+    * the published view ``pub`` bit-equal to the packed replica params
+      at EVERY publish (pub literally is the replica's state);
+    * the true staleness gap ``pack(trainer) - pack(replica)`` equal to
+      the publish residual to float tolerance at delta epochs;
+    * delta wire bits exactly ``layout.pair_bits``; resync bits exactly
+      the dense bucket;
+    * the sharded jitted subscriber (``make_apply_delta`` with
+      ``serve_param_specs``) bit-equal to the host ``apply_delta``.
+    """
+    from repro.dist.layout import pack_grads, rebudget_layout
+    from repro.serve import (RESYNC, apply_delta, apply_message,
+                             init_publisher_state, make_apply_delta,
+                             message_bits, publish)
+
+    mesh = make_mesh((4, 2), ("data", "model"))
+    W = data_world_size(mesh)
+    msize = model_axis_size(mesh)
+    opt = sgd_momentum(0.9)
+    train_cfg = CompressionConfig(compressor="gaussiank", ratio=0.02)
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    state = init_train_state(params, opt, workers=W, model_size=msize,
+                             compression=train_cfg)
+    step = make_train_step(CFG, mesh, opt, constant(0.05),
+                           compression=train_cfg, remat=False)
+
+    from repro.dist.layout import build_layout
+    pub_config = CompressionConfig(compressor="topk", ratio=0.05,
+                                   backend="reference")
+    # delta-layout reuse: re-budget the gradient-wire layout at the
+    # publish ratio — row geometry identical, codec capacities fixed-k
+    train_layout = build_layout(params, msize, train_cfg)
+    layout = rebudget_layout(train_layout, pub_config.ratio,
+                             pub_config.spec)
+    assert layout.d_row_total == train_layout.d_row_total
+    assert [s.row_off for s in layout.segments] == \
+        [s.row_off for s in train_layout.segments]
+
+    pub_state = init_publisher_state(layout)
+    # two replica chains: the host chain (apply_message on host arrays)
+    # carries the invariant checks; the device chain (jitted sharded
+    # subscriber) must track it bitwise leaf-for-leaf
+    replica = jax.tree.map(lambda x: np.zeros_like(np.asarray(x)), params)
+    replica_dev = replica
+    apply_jit = make_apply_delta(layout, mesh, replica)
+    key = jax.random.PRNGKey(7)
+    batch = _batch()
+    n_resync = n_delta = 0
+    for t in range(5):
+        state, _ = step(state, batch)
+        trainer_params = jax.device_get(state["params"])
+        pub_state, msg = publish(pub_state, trainer_params, layout,
+                                 pub_config, key, resync_every=2)
+        if msg.kind != RESYNC:
+            replica = apply_delta(replica, layout, msg.values,
+                                  msg.indices)
+            replica_dev = apply_jit(replica_dev, msg.values, msg.indices)
+            # sharded jitted subscriber == host subscriber, bitwise
+            for a, b in zip(jax.tree.leaves(jax.device_get(replica_dev)),
+                            jax.tree.leaves(replica)):
+                assert np.array_equal(a, np.asarray(b)), t
+            assert message_bits(msg) == layout.pair_bits(None), t
+            n_delta += 1
+        else:
+            replica = apply_message(replica, layout, msg)
+            replica_dev = replica
+            assert message_bits(msg) == \
+                layout.model_size * layout.d_row_total * 32, t
+            n_resync += 1
+            # acceptance invariant: replica == trainer EXACTLY
+            for a, b in zip(jax.tree.leaves(replica),
+                            jax.tree.leaves(trainer_params)):
+                assert np.array_equal(np.asarray(a), np.asarray(b)), t
+        P = pack_grads(layout, trainer_params, jnp.float32)
+        R = pack_grads(layout, jax.device_get(replica), jnp.float32)
+        # pub IS the replica's packed state, bitwise, at every publish
+        assert np.array_equal(np.asarray(pub_state["pub"]),
+                              np.asarray(R)), t
+        # staleness gap == the publish residual (how staleness is
+        # observed for free: |resid| is on-device already)
+        np.testing.assert_allclose(np.asarray(P - R),
+                                   np.asarray(pub_state["resid"]),
+                                   rtol=0, atol=1e-5)
+    assert n_resync >= 2 and n_delta >= 2, (n_resync, n_delta)
+    print("SERVE OK")
+
+
 def check_multipod():
     """Every compressor trains (loss decreases) on the 2x2x2 pod mesh;
     gaussiank additionally through every wire strategy (the gtopk rounds
@@ -845,11 +959,12 @@ def check_multipod():
         strategies = (("allgather", "hierarchical", "gtopk")
                       if comp == "gaussiank" else ("allgather",))
         for strat in strategies:
+            config = CompressionConfig(compressor=comp, ratio=0.02,
+                                       strategy=strat)
             state = init_train_state(params, opt, workers=4, model_size=2,
-                                     strategy=strat)
+                                     compression=config)
             step = make_train_step(CFG, mesh, opt, constant(0.05),
-                                   compressor=comp, ratio=0.02, remat=False,
-                                   strategy=strat)
+                                   compression=config, remat=False)
             losses = []
             for _ in range(6):
                 state, m = step(state, batch)
@@ -863,4 +978,4 @@ if __name__ == "__main__":
     {"eq2": check_eq2, "dense": check_dense, "gtopk": check_gtopk,
      "multipod": check_multipod, "adaptk": check_adaptk,
      "rtopk": check_rtopk, "bucketed": check_bucketed,
-     "chunked": check_chunked}[sys.argv[1]]()
+     "chunked": check_chunked, "serve": check_serve}[sys.argv[1]]()

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from repro.checkpoint import load_state, save_state
 from repro.core.adaptk import make_policy
+from repro.core.compression import CompressionConfig
 from repro.optim import sgd_momentum
 from repro.train import init_train_state
 
@@ -29,9 +30,10 @@ def _full_state():
     """TrainState with every optional piece populated: resid, resid2
     (hierarchical) and the adaptk controller state."""
     policy = make_policy("variance", ema=0.5)
-    state = init_train_state(_params(), sgd_momentum(0.9), workers=2,
-                             model_size=2, strategy="hierarchical",
-                             density_policy=policy)
+    state = init_train_state(
+        _params(), sgd_momentum(0.9), workers=2, model_size=2,
+        compression=CompressionConfig(strategy="hierarchical",
+                                      density_policy=policy))
     # make the stateful leaves non-trivial so equality is meaningful
     state["step"] = jnp.int32(7)
     state["resid"] = jax.tree.map(
@@ -92,15 +94,16 @@ def _legacy_and_flat_states():
 
     params = _params()
     layout = build_layout(params, 2, 0.05, get_compressor("topk"))
+    hier = CompressionConfig(strategy="hierarchical")
     legacy = init_train_state(params, sgd_momentum(0.9), workers=2,
-                              model_size=2, strategy="hierarchical")
+                              model_size=2, compression=hier)
     rng = np.random.default_rng(3)
     fill = lambda e: jnp.asarray(  # noqa: E731
         rng.normal(size=e.shape).astype(np.float32))
     legacy["resid"] = jax.tree.map(fill, legacy["resid"])
     legacy["resid2"] = jax.tree.map(fill, legacy["resid2"])
     flat = init_train_state(params, sgd_momentum(0.9), workers=2,
-                            model_size=2, strategy="hierarchical",
+                            model_size=2, compression=hier,
                             layout=layout)
     expect_resid = pack_residual_arrays(
         layout, [np.asarray(x) for x in jax.tree.leaves(legacy["resid"])])
@@ -195,10 +198,11 @@ def test_checkpoint_is_chunk_count_independent(tmp_path):
         return l, {"loss": l}
 
     def make_step(n_chunks):
-        return make_train_step(None, mesh, opt, constant(0.1),
-                               compressor="topk", ratio=ratio,
-                               loss_fn=loss_fn, layout=layout,
-                               chunks=n_chunks)
+        return make_train_step(
+            None, mesh, opt, constant(0.1),
+            compression=CompressionConfig(compressor="topk", ratio=ratio,
+                                          chunks=n_chunks),
+            loss_fn=loss_fn, layout=layout)
 
     batch = {"x": jnp.ones((1, 1))}
     state = init_train_state(params, opt, workers=1, model_size=1,
@@ -234,3 +238,39 @@ def test_load_casts_to_like_dtype(tmp_path):
     restored = load_state(path, {"x": jnp.zeros((6,), jnp.bfloat16)})
     assert restored["x"].dtype == np.dtype("bfloat16") or \
         restored["x"].dtype == jnp.bfloat16
+
+
+def test_old_checkpoint_zero_fills_publisher_cursor(tmp_path):
+    """A checkpoint written before train-to-serve streaming (no
+    ``publish/`` subtree) loads into a state that carries one: the
+    cursor zero-fills, and ``seq == 0`` forces a full resync on the next
+    publish — the safe re-seed (DESIGN.md §13)."""
+    from repro.core import get_compressor
+    from repro.dist.layout import build_layout
+    from repro.serve import init_publisher_state
+
+    state = init_train_state(_params(), sgd_momentum(0.9), workers=2,
+                             model_size=2,
+                             compression=CompressionConfig(
+                                 compressor="topk", ratio=0.05))
+    path = str(tmp_path / "old.npz")
+    save_state(path, state)
+
+    layout = build_layout(_params(), 2, 0.05, get_compressor("topk"))
+    pub = init_publisher_state(layout)
+    pub["seq"] = jnp.int32(9)
+    pub["pub"] = pub["pub"] + 1.0
+    like = dict(jax.tree.map(jnp.zeros_like, state), publish=pub)
+    restored = load_state(path, like)
+    assert int(restored["publish"]["seq"]) == 0
+    assert float(jnp.sum(jnp.abs(restored["publish"]["pub"]))) == 0.0
+    assert float(jnp.sum(jnp.abs(restored["publish"]["resid"]))) == 0.0
+
+    # and a checkpoint that DOES carry the cursor round-trips it
+    state2 = dict(state, publish=pub)
+    path2 = str(tmp_path / "new.npz")
+    save_state(path2, state2)
+    restored2 = load_state(path2, jax.tree.map(jnp.zeros_like, state2))
+    assert int(restored2["publish"]["seq"]) == 9
+    np.testing.assert_array_equal(np.asarray(restored2["publish"]["pub"]),
+                                  np.asarray(pub["pub"]))

@@ -18,6 +18,11 @@ adds gets its contracts checked for free:
 5. **bucketed == per-leaf == chunked equivalence** at the compression
    layer (same values/indices/residuals for the same leaves — the wire-
    level equivalence on a real mesh is pinned by tests/_dist_check.py);
+6. **delta-stream roundtrip** (DESIGN.md §13): every spec can carry the
+   train-to-serve weight-delta stream — resync publishes make the
+   replica BIT-equal to the trainer, the published view always equals
+   the packed replica bitwise, and ``pub + resid`` conserves the params
+   through the publisher's error feedback;
 
 plus the adaptive-path contracts: allocation budget exactness per spec,
 dynamic-k selection honoring the traced budget, and the global-k
@@ -40,11 +45,14 @@ import jax.numpy as jnp
 from hypothesis import given, settings, strategies as st
 
 from repro.core import adaptk, codec, compressors
+from repro.core.compression import CompressionConfig
 from repro.core.compressors import get_compressor
 from repro.core.error_feedback import compress_with_ef, supports_fused
 from repro.dist import aggregate, compat
 from repro.dist.layout import (build_chunk_plan, build_layout, chunk_view,
                                leaf_key_salt, pack_grads)
+from repro.serve import (DELTA, RESYNC, apply_message, init_publisher_state,
+                         message_bits, publish)
 
 ALL = tuple(compressors.available())
 
@@ -268,6 +276,67 @@ def test_granularity_equivalence(name, seed):
         np.asarray(jnp.concatenate(cis, axis=1)), np.asarray(bi))
     np.testing.assert_array_equal(
         np.asarray(jnp.concatenate(cEs, axis=1)), np.asarray(bE))
+
+
+# ---------------------------------------------------------------------------
+# contract 6: delta-stream publish/subscribe roundtrip (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(COVERED, SEEDS)
+def test_delta_stream_roundtrip(name, seed):
+    """Every covered spec can carry the train-to-serve weight-delta
+    stream: the first publish (seq 0) and every ``resync_every``-th one
+    resync the replica BIT-equal to the trainer; delta publishes keep
+    ``pub == pack(replica)`` bitwise (publisher and subscriber apply the
+    same ``decode_add``), conserve params through the publisher EF
+    (``pub + resid == P`` up to float addition), and cost exactly the
+    layout's codec-pair bits on the wire."""
+    spec = get_compressor(name)
+    M, ratio, resync_every = 2, 0.08, 3
+    rng = np.random.default_rng(seed)
+    shapes = {"wa": (40, 3), "wb": (17,), "wc": (9, 5)}
+    params = {n: jnp.asarray(rng.normal(size=s).astype(np.float32))
+              for n, s in shapes.items()}
+    layout = build_layout(params, M, ratio, spec)
+    config = CompressionConfig(compressor=name, ratio=ratio,
+                               backend="reference")
+    state = init_publisher_state(layout)
+    replica = {n: jnp.zeros(s, jnp.float32) for n, s in shapes.items()}
+    key = jax.random.PRNGKey(seed & 0x7FFFFFFF)
+
+    for tick in range(5):
+        params = {n: p + jnp.asarray(
+            (0.01 * rng.normal(size=p.shape)).astype(np.float32))
+            for n, p in params.items()}
+        state, msg = publish(state, params, layout, config, key,
+                             resync_every=resync_every)
+        assert msg.seq == tick
+        if tick == 0 or tick % resync_every == 0:
+            assert msg.kind == RESYNC
+            assert message_bits(msg) == layout.model_size * \
+                layout.d_row_total * 32
+        else:
+            assert msg.kind == DELTA
+            assert message_bits(msg) == layout.pair_bits(None)
+        replica = apply_message(replica, layout, msg)
+        if msg.kind == RESYNC:
+            for n in shapes:
+                np.testing.assert_array_equal(
+                    np.asarray(replica[n]), np.asarray(params[n]),
+                    err_msg=f"{name}: replica != trainer at resync")
+        # the published view IS the packed replica, bitwise, every tick
+        R = pack_grads(layout, replica, jnp.float32)
+        np.testing.assert_array_equal(
+            np.asarray(state["pub"]), np.asarray(R),
+            err_msg=f"{name}: pub != pack(replica)")
+        # publisher EF conserves params: pub + resid == P
+        Pb = pack_grads(layout, params, jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(state["pub"] + state["resid"]), np.asarray(Pb),
+            rtol=1e-5, atol=1e-5,
+            err_msg=f"{name}: pub + resid does not conserve params")
 
 
 # ---------------------------------------------------------------------------

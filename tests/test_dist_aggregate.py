@@ -212,9 +212,13 @@ def test_gtopk_round_plan_multi_axis():
 
 def test_resolve_strategy_precedence():
     """The legacy flag only promotes the default; an explicitly chosen
-    strategy always wins (one rule for every layer and CLI)."""
-    assert aggregate.resolve_strategy("allgather", True) == "hierarchical"
-    assert aggregate.resolve_strategy("gtopk", True) == "gtopk"
+    strategy always wins (one rule for every layer and CLI).  Every use
+    of the retired boolean now warns."""
+    with pytest.warns(DeprecationWarning, match="hierarchical=True"):
+        assert (aggregate.resolve_strategy("allgather", True)
+                == "hierarchical")
+    with pytest.warns(DeprecationWarning, match="hierarchical=True"):
+        assert aggregate.resolve_strategy("gtopk", True) == "gtopk"
     assert aggregate.resolve_strategy("hierarchical") == "hierarchical"
     assert aggregate.resolve_strategy("allgather") == "allgather"
     with pytest.raises(ValueError):

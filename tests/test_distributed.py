@@ -81,6 +81,19 @@ def test_adaptive_density_matches_simulation():
 
 
 @pytest.mark.slow
+def test_serve_delta_stream_tracks_trainer():
+    """Train-to-serve weight-delta streaming (DESIGN.md §13) against a
+    real training run on the (4,2) mesh: replica params BIT-equal to
+    trainer params at every full-resync epoch, the published view
+    bit-equal to the packed replica at every publish, staleness gap ==
+    publish residual at delta epochs, wire bits matching the layout
+    exactly, and the sharded jitted subscriber bit-equal to the host
+    subscriber (ISSUE 8 acceptance)."""
+    out = _run("serve")
+    assert "SERVE OK" in out
+
+
+@pytest.mark.slow
 def test_rtopk_matches_simulation():
     """rTop-k end-to-end on the (4,2) mesh == single-process simulation
     within 1e-7 for all three wire strategies (ISSUE 7 acceptance), plus

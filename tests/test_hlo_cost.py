@@ -96,6 +96,7 @@ def _trace_chunked(params, strategy, n_chunks, world=4):
     from jax.sharding import PartitionSpec as P
 
     from repro.core import get_compressor
+    from repro.core.compression import CompressionConfig
     from repro.dist import aggregate, compat
     from repro.dist.layout import build_chunk_plan, build_layout
 
@@ -105,12 +106,13 @@ def _trace_chunked(params, strategy, n_chunks, world=4):
     grads = jax.tree.map(jnp.zeros_like, params)
     flat = jnp.zeros((layout.flat_size,))
     mesh = AbstractMesh((("data", world), ("model", 1)))
+    config = CompressionConfig(compressor="topk", ratio=0.05,
+                               strategy=strategy, backend="reference")
 
     def body(g, e):
         return aggregate.aggregate_bucketed_chunked(
-            g, e, layout, plan, spec, ("data",), "model",
-            jax.random.PRNGKey(0), strategy=strategy, world=world,
-            backend="reference")[0]
+            g, e, layout, plan, config, ("data",), "model",
+            jax.random.PRNGKey(0), world=world).agg
 
     sm = compat.shard_map(body, mesh=mesh, in_specs=(P(), P()),
                           out_specs=P(), axis_names={"data"},

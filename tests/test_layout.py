@@ -15,6 +15,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import codec, get_compressor
 from repro.core.adaptk import make_policy
+from repro.core.compression import CompressionConfig
 from repro.dist import aggregate, compat
 from repro.dist.layout import (build_chunk_plan, build_layout, chunk_view,
                                collective_count, flat_dims, leaf_key_salt,
@@ -104,13 +105,14 @@ def test_layout_validation_errors():
     with pytest.raises(ValueError):   # wrong compressor
         aggregate.aggregate_bucketed(
             _grads(_params()), jnp.zeros((layout.flat_size,)), layout,
-            get_compressor("randk"), ("data",), "model",
-            jax.random.PRNGKey(0))
+            CompressionConfig(compressor="randk", ratio=RATIO),
+            ("data",), "model", jax.random.PRNGKey(0))
     with pytest.raises(ValueError):   # adaptive mode mismatch
         aggregate.aggregate_bucketed(
             _grads(_params()), jnp.zeros((layout.flat_size,)), layout,
-            spec, ("data",), "model", jax.random.PRNGKey(0),
-            density_policy=make_policy("variance"))
+            CompressionConfig(compressor="topk", ratio=RATIO,
+                              density_policy=make_policy("variance")),
+            ("data",), "model", jax.random.PRNGKey(0))
 
 
 # ---------------------------------------------------------------------------
@@ -188,7 +190,8 @@ def test_chunk_plan_validation_errors():
     with pytest.raises(ValueError):   # chunked agg rejects a stale plan
         aggregate.aggregate_bucketed_chunked(
             _grads(_params(extra=True)),
-            jnp.zeros((other.flat_size,)), other, plan, spec,
+            jnp.zeros((other.flat_size,)), other, plan,
+            CompressionConfig(compressor="topk", ratio=RATIO),
             ("data",), "model", jax.random.PRNGKey(0))
 
 
@@ -219,7 +222,6 @@ def test_leaf_salts_stable_under_insertion():
 def test_per_leaf_randk_unchanged_by_unrelated_leaf():
     """aggregate_compressed with a keyed compressor selects the same
     coordinates for leaf "a" whether or not an unrelated leaf exists."""
-    spec = get_compressor("randk")
     mesh = jax.make_mesh((1, 1), ("data", "model"))
 
     def run(params):
@@ -227,10 +229,10 @@ def test_per_leaf_randk_unchanged_by_unrelated_leaf():
         resid = _resid_tree(params)
 
         def body(g, e):
-            agg, *_ = aggregate.aggregate_compressed(
-                g, e, spec, RATIO, ("data",), "model", MSIZE,
-                jax.random.PRNGKey(7), world=1)
-            return agg
+            res = aggregate.aggregate_compressed(
+                g, e, CompressionConfig(compressor="randk", ratio=RATIO),
+                ("data",), "model", MSIZE, jax.random.PRNGKey(7), world=1)
+            return res.agg
         sm = compat.shard_map(body, mesh=mesh, in_specs=(P(), P()),
                               out_specs=P(), axis_names={"data"},
                               check_vma=False)
@@ -363,22 +365,25 @@ def _run_both(params, strategy, *, mesh_shape=(1, 1),
     r2 = _resid_tree(params, seed=11, scale=5e-4) if with_r2 else None
     mesh = jax.make_mesh(mesh_shape, axes_names)
     data_axes = tuple(a for a in axes_names if a != "model")
-    kw = dict(strategy=strategy, world=1, codec_dtype=codec_dtype,
-              momentum_correction=momentum_correction, backend=backend,
-              density_policy=density_policy,
-              step=jnp.int32(0) if density_policy else None)
+    config = CompressionConfig(
+        compressor=name, ratio=RATIO, strategy=strategy,
+        codec_dtype=codec_dtype, momentum_correction=momentum_correction,
+        backend=backend, density_policy=density_policy)
+    kw = dict(world=1, step=jnp.int32(0) if density_policy else None)
 
     def per_leaf(g, e, *r2s):
-        agg, ne, nr2, _, m = aggregate.aggregate_compressed(
-            g, e, spec, RATIO, data_axes, "model", MSIZE,
+        res = aggregate.aggregate_compressed(
+            g, e, config, data_axes, "model", MSIZE,
             jax.random.PRNGKey(7), resid2=r2s[0] if r2s else None, **kw)
-        return (agg, ne, m) + ((nr2,) if r2s else ())
+        return ((res.agg, res.resid, res.metrics)
+                + ((res.resid2,) if r2s else ()))
 
     def bucketed(g, e, *r2s):
-        agg, ne, nr2, _, m = aggregate.aggregate_bucketed(
-            g, e, layout, spec, data_axes, "model",
+        res = aggregate.aggregate_bucketed(
+            g, e, layout, config, data_axes, "model",
             jax.random.PRNGKey(7), resid2=r2s[0] if r2s else None, **kw)
-        return (agg, ne, m) + ((nr2,) if r2s else ())
+        return ((res.agg, res.resid, res.metrics)
+                + ((res.resid2,) if r2s else ()))
 
     n_out = 4 if with_r2 else 3
     sm1 = compat.shard_map(per_leaf, mesh=mesh,
@@ -438,17 +443,20 @@ def test_bucketed_runtime_grad_dtype_wins_over_layout_dtype():
     resid = _resid_tree(_params())
     mesh = jax.make_mesh((1, 1), ("data", "model"))
 
+    config = CompressionConfig(compressor="topk", ratio=RATIO,
+                               backend="reference")
+
     def bucketed(g, e):
-        agg, ne, _, _, m = aggregate.aggregate_bucketed(
-            g, e, layout, spec, ("data",), "model",
-            jax.random.PRNGKey(7), world=1, backend="reference")
-        return agg, m
+        res = aggregate.aggregate_bucketed(
+            g, e, layout, config, ("data",), "model",
+            jax.random.PRNGKey(7), world=1)
+        return res.agg, res.metrics
 
     def per_leaf(g, e):
-        agg, ne, _, _, m = aggregate.aggregate_compressed(
-            g, e, spec, RATIO, ("data",), "model", MSIZE,
-            jax.random.PRNGKey(7), world=1, backend="reference")
-        return agg, m
+        res = aggregate.aggregate_compressed(
+            g, e, config, ("data",), "model", MSIZE,
+            jax.random.PRNGKey(7), world=1)
+        return res.agg, res.metrics
 
     sm2 = compat.shard_map(bucketed, mesh=mesh, in_specs=(P(), P()),
                            out_specs=(P(), P()), axis_names={"data"},
@@ -495,22 +503,23 @@ def _trace_collectives(params, strategy, bucketed, mesh,
     flat = jnp.zeros((layout.flat_size,))
     r2_tree = resid if with_r2 else None
     r2_flat = flat if with_r2 else None
-    kw = dict(strategy=strategy, world=1, density_policy=density_policy,
-              backend="reference",
-              step=jnp.int32(0) if density_policy else None)
+    config = CompressionConfig(compressor="topk", ratio=RATIO,
+                               strategy=strategy, backend="reference",
+                               density_policy=density_policy)
+    kw = dict(world=1, step=jnp.int32(0) if density_policy else None)
 
     def body(g, e, *r2s):
         if bucketed:
-            agg, *_ = aggregate.aggregate_bucketed(
-                g, e, layout, spec, data_axes, "model",
+            res = aggregate.aggregate_bucketed(
+                g, e, layout, config, data_axes, "model",
                 jax.random.PRNGKey(0), resid2=r2s[0] if r2s else None,
                 **kw)
         else:
-            agg, *_ = aggregate.aggregate_compressed(
-                g, e, spec, RATIO, data_axes, "model", MSIZE,
+            res = aggregate.aggregate_compressed(
+                g, e, config, data_axes, "model", MSIZE,
                 jax.random.PRNGKey(0), resid2=r2s[0] if r2s else None,
                 **kw)
-        return agg
+        return res.agg
 
     sm = compat.shard_map(body, mesh=mesh,
                           in_specs=(P(),) * (2 + with_r2), out_specs=P(),
@@ -586,9 +595,10 @@ def test_train_step_bucketed_matches_per_leaf():
                                  layout=lay)
         if lay is not None:
             assert state["resid"].shape == (1, layout.flat_size)
-        step = make_train_step(None, mesh, opt, constant(0.1),
-                               compressor="topk", ratio=RATIO,
-                               loss_fn=loss_fn, layout=lay)
+        step = make_train_step(
+            None, mesh, opt, constant(0.1),
+            compression=CompressionConfig(compressor="topk", ratio=RATIO),
+            loss_fn=loss_fn, layout=lay)
         for _ in range(2):
             state, m = step(state, batch)
         runs[label] = (state, m)
@@ -627,9 +637,11 @@ def test_train_step_chunked_matches_unchunked():
     for n in (1, 3):
         state = init_train_state(params, opt, workers=1, model_size=1,
                                  layout=layout)
-        step = make_train_step(None, mesh, opt, constant(0.1),
-                               compressor="topk", ratio=RATIO,
-                               loss_fn=loss_fn, layout=layout, chunks=n)
+        step = make_train_step(
+            None, mesh, opt, constant(0.1),
+            compression=CompressionConfig(compressor="topk", ratio=RATIO,
+                                          chunks=n),
+            loss_fn=loss_fn, layout=layout)
         for _ in range(3):
             state, m = step(state, batch)
         assert float(m["collectives_per_step"]) == float(n)
@@ -649,15 +661,17 @@ def test_train_step_chunked_needs_bucketed_pipeline():
     mesh = jax.make_mesh((1, 1), ("data", "model"))
     opt = sgd_momentum(0.9)
     layout = build_layout(params, 1, RATIO, get_compressor("topk"))
+    sparse2 = CompressionConfig(compressor="topk", ratio=RATIO, chunks=2)
     with pytest.raises(ValueError):   # chunks without a layout
-        make_train_step(None, mesh, opt, constant(0.1), compressor="topk",
-                        ratio=RATIO, chunks=2)
+        make_train_step(None, mesh, opt, constant(0.1), compression=sparse2)
     with pytest.raises(ValueError):   # chunks on the dense path
-        make_train_step(None, mesh, opt, constant(0.1), compressor="none",
-                        chunks=2)
+        make_train_step(None, mesh, opt, constant(0.1),
+                        compression=CompressionConfig(compressor="none",
+                                                      chunks=2))
     with pytest.raises(ValueError):   # nonsensical chunk count
-        make_train_step(None, mesh, opt, constant(0.1), compressor="topk",
-                        ratio=RATIO, layout=layout, chunks=0)
+        make_train_step(None, mesh, opt, constant(0.1),
+                        compression=sparse2.replace(chunks=0),
+                        layout=layout)
 
 
 def test_train_step_layout_mismatch_fails_loudly():
@@ -668,17 +682,19 @@ def test_train_step_layout_mismatch_fails_loudly():
     mesh = jax.make_mesh((1, 1), ("data", "model"))
     opt = sgd_momentum(0.9)
     layout1 = build_layout(params, 1, RATIO, get_compressor("topk"))
+    topk = CompressionConfig(compressor="topk", ratio=RATIO)
     with pytest.raises(ValueError):   # model size != mesh model axis
-        make_train_step(None, mesh, opt, constant(0.1), compressor="topk",
-                        ratio=RATIO,
+        make_train_step(None, mesh, opt, constant(0.1), compression=topk,
                         layout=build_layout(params, 2, RATIO,
                                             get_compressor("topk")))
     with pytest.raises(ValueError):   # compressor mismatch
         make_train_step(None, mesh, opt, constant(0.1),
-                        compressor="gaussiank", ratio=RATIO, layout=layout1)
+                        compression=topk.replace(compressor="gaussiank"),
+                        layout=layout1)
     with pytest.raises(ValueError):   # ratio mismatch
-        make_train_step(None, mesh, opt, constant(0.1), compressor="topk",
-                        ratio=RATIO * 2, layout=layout1)
+        make_train_step(None, mesh, opt, constant(0.1),
+                        compression=topk.replace(ratio=RATIO * 2),
+                        layout=layout1)
     with pytest.raises(ValueError):   # state model size mismatch
         init_train_state(params, opt, workers=1, model_size=4,
                          layout=layout1)

@@ -4,6 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import get_compressor
+from repro.core.compression import CompressionConfig
 from repro.data import lm_batch
 from repro.launch.mesh import make_mesh
 from repro.models import ModelConfig, init_params
@@ -40,11 +41,13 @@ def test_mc_training_converges():
     mesh = make_mesh((1, 1), ("data", "model"))
     opt = sgd_momentum(0.0)  # momentum lives client-side under MC
     params = init_params(CFG, jax.random.PRNGKey(0))
+    config = CompressionConfig(compressor="gaussiank", ratio=0.01,
+                               momentum_correction=0.9)
+    # mc > 0 in the config allocates the v-state (resid2) directly
     state = init_train_state(params, opt, workers=1, model_size=1,
-                             hierarchical=True)  # allocates the v-state
+                             compression=config)
     step = make_train_step(CFG, mesh, opt, constant(0.1),
-                           compressor="gaussiank", ratio=0.01, remat=False,
-                           momentum_correction=0.9)
+                           compression=config, remat=False)
     batch = lm_batch(0, global_batch=4, seq_len=16, vocab=CFG.vocab_size)
     losses = []
     for _ in range(6):

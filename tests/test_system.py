@@ -9,6 +9,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.checkpoint import load_state, save_state
 from repro.configs import ARCHS, INPUT_SHAPES, applicable, input_specs
+from repro.core.compression import CompressionConfig
 from repro.data import lm_batch, mnist_like
 from repro.dist.sharding import param_specs
 from repro.launch.mesh import make_mesh
@@ -29,10 +30,11 @@ def test_single_device_training_all_compressors():
     batch = lm_batch(0, global_batch=4, seq_len=16, vocab=CFG.vocab_size)
     for comp in ("none", "topk", "gaussiank", "gaussiank2", "dgck",
                  "trimmedk", "randk"):
+        config = CompressionConfig(compressor=comp, ratio=0.01)
         state = init_train_state(params, opt, workers=1, model_size=1,
-                                 with_residual=comp != "none")
+                                 compression=config)
         step = make_train_step(CFG, mesh, opt, constant(0.1),
-                               compressor=comp, ratio=0.01, remat=False)
+                               compression=config, remat=False)
         losses = []
         for i in range(5):
             state, m = step(state, batch)
@@ -46,8 +48,9 @@ def test_checkpoint_roundtrip(tmp_path):
     opt = sgd_momentum(0.9)
     params = init_params(CFG, jax.random.PRNGKey(0))
     state = init_train_state(params, opt, workers=1, model_size=1)
-    step = make_train_step(CFG, mesh, opt, constant(0.1),
-                           compressor="gaussiank", ratio=0.01, remat=False)
+    step = make_train_step(
+        CFG, mesh, opt, constant(0.1), remat=False,
+        compression=CompressionConfig(compressor="gaussiank", ratio=0.01))
     batch = lm_batch(0, global_batch=4, seq_len=16, vocab=CFG.vocab_size)
     state, _ = step(state, batch)
     path = str(tmp_path / "ck.npz")
@@ -140,12 +143,13 @@ def test_adaptive_training_and_resume():
     batch = lm_batch(0, global_batch=4, seq_len=16, vocab=CFG.vocab_size)
     policy = make_policy("variance", ema=0.5, warmup_steps=3,
                          warmup_mult=4.0)
+    config = CompressionConfig(compressor="topk", ratio=0.01,
+                               backend="reference", density_policy=policy)
     state = init_train_state(params, opt, workers=1, model_size=1,
-                             density_policy=policy)
+                             compression=config)
     assert "adaptk" in state
     step = make_train_step(CFG, mesh, opt, constant(0.1),
-                           compressor="topk", ratio=0.01, remat=False,
-                           backend="reference", density_policy=policy)
+                           compression=config, remat=False)
     losses, ks = [], []
     for i in range(4):
         state, m = step(state, batch)
@@ -178,10 +182,11 @@ def test_adaptive_ema_needs_controller_state():
     opt = sgd_momentum(0.9)
     params = init_params(CFG, jax.random.PRNGKey(0))
     state = init_train_state(params, opt, workers=1, model_size=1)
-    step = make_train_step(CFG, mesh, opt, constant(0.1),
-                           compressor="topk", ratio=0.01, remat=False,
-                           backend="reference",
-                           density_policy=make_policy("variance", ema=0.5))
+    step = make_train_step(
+        CFG, mesh, opt, constant(0.1), remat=False,
+        compression=CompressionConfig(
+            compressor="topk", ratio=0.01, backend="reference",
+            density_policy=make_policy("variance", ema=0.5)))
     batch = lm_batch(0, global_batch=2, seq_len=8, vocab=CFG.vocab_size)
     with pytest.raises(ValueError, match="controller state"):
         step(state, batch)

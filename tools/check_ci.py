@@ -14,7 +14,11 @@ Three invariants over ``.github/workflows/*.yml``:
    legs — real ``hypothesis`` with a pinned ``--hypothesis-seed`` and
    the conftest fallback ``stub`` — and includes the compressor-
    conformance suite; dropping a leg would let the other engine rot
-   silently (tier-1 only ever exercises whichever engine is installed).
+   silently (tier-1 only ever exercises whichever engine is installed);
+4. the ``perf`` job (when the workflow has one) runs the train-to-serve
+   delta-stream benchmark AND gates it (``--serve-measured`` /
+   ``--serve-baseline``) — emitting ``BENCH_serve.json`` without gating
+   it would let the resync bit-exactness invariant rot unchecked.
 
 The parser is deliberately dumb: jobs are the 2-space-indented keys of
 the ``jobs:`` block.  It fails loudly when it finds no jobs at all, so
@@ -72,6 +76,22 @@ def audit_properties(path: str, body: list) -> list:
     return errors
 
 
+def audit_perf(path: str, body: list) -> list:
+    """Invariant 4: the serve delta-stream lane is run AND gated."""
+    text = "\n".join(body)
+    errors = []
+    if "benchmarks.serve_staleness" not in text:
+        errors.append(
+            f"{path}: perf job does not run benchmarks.serve_staleness — "
+            "the train-to-serve delta stream must be measured in CI")
+    elif not ("--serve-measured" in text and "--serve-baseline" in text):
+        errors.append(
+            f"{path}: perf job emits BENCH_serve.json but does not gate "
+            "it (--serve-measured/--serve-baseline) — ungated, the "
+            "resync bit-exactness invariant rots unchecked")
+    return errors
+
+
 def audit(path: str) -> list:
     with open(path) as f:
         text = f.read()
@@ -90,6 +110,8 @@ def audit(path: str) -> list:
                 "use the .github/actions/setup-repro composite action")
         if name == "properties":
             errors += audit_properties(path, body)
+        if name == "perf":
+            errors += audit_perf(path, body)
     return errors
 
 

@@ -66,6 +66,20 @@ chunked-schedule gate (DESIGN.md §11):
   times are NOT compared across machines — the chunked/unchunked ratio
   within one run is the machine-independent invariant.
 
+serve (``BENCH_serve.json``, schema ``serve/v1``, gated when
+``--serve-measured`` / ``--serve-baseline`` are passed) — the
+train-to-serve delta-stream gate (DESIGN.md §13):
+
+* hard invariants within the measured file: ``resync-exact`` and
+  ``gap-vs-resid`` must both report 1 (replica bit-equal to trainer at
+  every resync epoch; staleness gap == publish residual);
+* wall, within the measured file: ``tokens-streaming`` must not exceed
+  ``tokens-frozen`` by more than ``--serve-tol`` — delta ingestion must
+  not collapse decode throughput;
+* baseline pin: every baseline row must still be measured, and the
+  per-ratio ``delta-wire-*`` bits must match the committed baseline
+  EXACTLY (deterministic layout geometry).
+
 ``--update`` rewrites the baseline(s) from the measured file(s) instead
 of checking (run on the reference machine, commit the result).
 
@@ -253,6 +267,67 @@ def check_overlap(measured: dict, baseline: dict, tol: float) -> list:
     return errors
 
 
+SERVE_SCHEMA = "serve/v1"
+
+
+def load_serve(path: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    if data.get("schema") != SERVE_SCHEMA:
+        raise SystemExit(f"{path}: unexpected schema "
+                         f"{data.get('schema')!r} (want {SERVE_SCHEMA!r})")
+    return {(r["shape"], r["method"]): r for r in data["rows"]}
+
+
+def check_serve(measured: dict, baseline: dict, tol: float) -> list:
+    """Gate the train-to-serve delta stream (DESIGN.md §13): the resync
+    bit-exactness and gap==resid invariants are hard 0/1 checks within
+    the measured file; delta wire bits are deterministic layout geometry
+    pinned exactly to the committed baseline; streaming decode must not
+    collapse throughput vs frozen weights beyond ``tol``x."""
+    errors = []
+    # 1. hard invariants, within the measured file
+    for method in ("resync-exact", "gap-vs-resid"):
+        rows = [key for key in measured if key[1] == method]
+        if not rows:
+            errors.append(f"serve: no {method} row in measured file")
+        for key in rows:
+            if measured[key]["passes"] != 1:
+                errors.append(
+                    f"serve {method}@{key[0]}: invariant BROKEN — replica "
+                    "params must be bit-equal to trainer at every resync "
+                    "and the staleness gap must equal the publish residual")
+    # 2. wall: streaming decode <= tol x frozen on this runner
+    stream_rows = [key for key in measured if key[1] == "tokens-streaming"]
+    if not stream_rows:
+        errors.append("serve: no tokens-streaming rows in measured file")
+    for shape, method in stream_rows:
+        twin = (shape, "tokens-frozen")
+        if twin not in measured:
+            errors.append(f"serve@{shape}: no tokens-frozen twin row")
+            continue
+        s, f = measured[(shape, method)], measured[twin]
+        if f["ms"] > 0 and s["ms"] > f["ms"] * tol:
+            errors.append(
+                f"serve@{shape}: streaming decode {s['ms']}ms > "
+                f"{tol:.1f}x frozen {f['ms']}ms — delta ingestion "
+                "collapsed serving throughput")
+    # 3. committed baseline: row presence + exact wire-bit pins
+    for key, base in baseline.items():
+        got = measured.get(key)
+        if got is None:
+            errors.append(f"serve {key[1]}@{key[0]}: missing from "
+                          "measured file")
+        elif (key[1].startswith("delta-wire-")
+              and got["passes"] != base["passes"]):
+            errors.append(
+                f"serve {key[1]}@{key[0]}: wire bits {got['passes']} != "
+                f"baseline {base['passes']} (delta framing is "
+                "deterministic layout geometry — drift means the codec "
+                "capacity rule or message framing changed)")
+    return errors
+
+
 RTOPK_SCHEMA = "rtopk/v1"
 
 
@@ -400,6 +475,16 @@ def main(argv=None) -> int:
                     help="allowed chunked-vs-unchunked step wall-time "
                          "overhead (CPU runners are noisy; the dispatch "
                          "pins stay exact regardless)")
+    ap.add_argument("--serve-measured", default="",
+                    help="freshly emitted BENCH_serve.json (enables the "
+                         "train-to-serve delta-stream gate)")
+    ap.add_argument("--serve-baseline", default="",
+                    help="committed benchmarks/baselines/serve.json")
+    ap.add_argument("--serve-tol", type=float, default=8.0,
+                    help="allowed streaming-vs-frozen decode wall-time "
+                         "factor (on the CPU runner the publish encode "
+                         "dominates the tiny decode step; the exactness "
+                         "invariants stay hard regardless)")
     ap.add_argument("--update", action="store_true",
                     help="rewrite the baseline(s) from the measured file(s)")
     args = ap.parse_args(argv)
@@ -412,6 +497,9 @@ def main(argv=None) -> int:
                          "together")
     if bool(args.overlap_measured) != bool(args.overlap_baseline):
         raise SystemExit("--overlap-measured and --overlap-baseline go "
+                         "together")
+    if bool(args.serve_measured) != bool(args.serve_baseline):
+        raise SystemExit("--serve-measured and --serve-baseline go "
                          "together")
 
     if args.update:
@@ -430,6 +518,10 @@ def main(argv=None) -> int:
             load_overlap(args.overlap_measured)
             shutil.copyfile(args.overlap_measured, args.overlap_baseline)
             print(f"baseline updated: {args.overlap_baseline}")
+        if args.serve_measured:
+            load_serve(args.serve_measured)
+            shutil.copyfile(args.serve_measured, args.serve_baseline)
+            print(f"baseline updated: {args.serve_baseline}")
         return 0
 
     errors = check(load(args.measured), load(args.baseline),
@@ -444,6 +536,10 @@ def main(argv=None) -> int:
         errors += check_overlap(load_overlap(args.overlap_measured),
                                 load_overlap(args.overlap_baseline),
                                 args.overlap_tol)
+    if args.serve_measured:
+        errors += check_serve(load_serve(args.serve_measured),
+                              load_serve(args.serve_baseline),
+                              args.serve_tol)
     for e in errors:
         print(f"PERF FAIL: {e}")
     if not errors:
