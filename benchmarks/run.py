@@ -18,7 +18,8 @@ import time
 
 MODULES = ["fig5_bound", "fig2_histograms", "fig1_fig6_convergence",
            "fig4_selection_speed", "fig10_sensitivity", "fig_rtopk",
-           "table2_scaling", "overlap_schedule", "serve_staleness"]
+           "table2_scaling", "overlap_schedule", "serve_staleness",
+           "tuner_decision"]
 
 
 def run_module(name: str, smoke: bool = False) -> int:

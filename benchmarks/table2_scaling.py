@@ -34,6 +34,7 @@ import os
 from repro.configs import ARCHS
 
 P_WORKERS = 16       # data-parallel workers (paper's worker count)
+N_PODS = 4           # pod split for the two-level strategies (4 x 4)
 RATIO = 0.001
 
 
@@ -43,6 +44,9 @@ def _closed_form_rows(limit=None):
     rows = []
     ag_pairs = strategy_wire_pairs("allgather", P_WORKERS)
     gt_pairs = strategy_wire_pairs("gtopk", P_WORKERS)
+    # two-level strategies on the 4x4 pod split of the 16 workers
+    hi_pairs = strategy_wire_pairs("hierarchical", P_WORKERS, N_PODS)
+    hg_pairs = strategy_wire_pairs("hier_gtopk", P_WORKERS, N_PODS)
     for name, cfg in sorted(ARCHS.items())[:limit]:
         import jax
         from repro.models import init_params
@@ -54,12 +58,16 @@ def _closed_form_rows(limit=None):
         pair_bytes = k_cap * 8                       # values f32 + idx s32
         ag_bytes = ag_pairs * pair_bytes
         gt_bytes = gt_pairs * pair_bytes
+        hg_bytes = hg_pairs * pair_bytes
         rows.append((f"table2/comm/{name}", 0.0,
                      f"dense_MB={dense_bytes/2**20:.1f};"
                      f"allgather_MB={ag_bytes/2**20:.1f};"
                      f"gtopk_MB={gt_bytes/2**20:.1f};"
+                     f"hier_MB={hi_pairs * pair_bytes/2**20:.1f};"
+                     f"hier_gtopk_MB={hg_bytes/2**20:.1f};"
                      f"allgather_red={dense_bytes/ag_bytes:.0f}x;"
-                     f"gtopk_red={dense_bytes/gt_bytes:.0f}x"))
+                     f"gtopk_red={dense_bytes/gt_bytes:.0f}x;"
+                     f"hier_gtopk_red={dense_bytes/hg_bytes:.0f}x"))
     return rows
 
 
@@ -130,12 +138,16 @@ def _collectives_rows(limit=None):
         L = len(jax.tree.leaves(shapes))
         ag_pl = collective_count("allgather", P_WORKERS, leaves=L)
         gt_pl = collective_count("gtopk", P_WORKERS, leaves=L)
+        hg_pl = collective_count("hier_gtopk", P_WORKERS, N_PODS,
+                                 leaves=L)
         ag_b = collective_count("allgather", P_WORKERS)
         gt_b = collective_count("gtopk", P_WORKERS)
+        hg_b = collective_count("hier_gtopk", P_WORKERS, N_PODS)
         rows.append((f"table2/collectives/{name}", 0.0,
                      f"leaves={L};"
                      f"allgather={ag_pl}->{ag_b};"
                      f"gtopk={gt_pl}->{gt_b};"
+                     f"hier_gtopk={hg_pl}->{hg_b};"
                      f"bucketed_red={ag_pl / ag_b:.0f}x"))
     return rows
 
@@ -202,5 +214,6 @@ def run(smoke: bool = False):
         eff = t_cm / t_iter if t_iter else 0.0
         rows.append((f"table2/eff/{r['arch']}/{r['compressor']}",
                      round(t_iter * 1e6, 1),
-                     f"scaling_eff={eff:.3f};dom={rf['dominant']}"))
+                     f"scaling_eff={eff:.3f};dom={rf['dominant']};"
+                     f"hw={rf.get('hardware', '?')}"))
     return rows

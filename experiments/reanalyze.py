@@ -2,6 +2,7 @@
 recompilation) and update the dryrun JSONs in place.
 
   PYTHONPATH=src python experiments/reanalyze.py experiments/dryrun_*.json
+  PYTHONPATH=src python experiments/reanalyze.py --topology topo.json ...
 """
 import gzip
 import json
@@ -9,9 +10,14 @@ import sys
 
 from repro.launch import hlo_cost
 from repro.launch import roofline as rl
+from repro.launch import topo as topo_mod
 
 
 def main(paths):
+    topo = topo_mod.DEFAULT_TOPOLOGY
+    if paths and paths[0] == "--topology":
+        topo = topo_mod.load_topology(paths[1])
+        paths = paths[2:]
     for path in paths:
         with open(path) as f:
             recs = json.load(f)
@@ -23,10 +29,14 @@ def main(paths):
             with gzip.open(hp, "rt") as f:
                 hc = hlo_cost.analyze(f.read())
             coll = hc["collectives"]
+            msgs = hc.get("collective_messages", {})
             terms = rl.roofline_terms(
                 hc["flops"], hc["bytes"], coll.get("total", 0.0),
-                r["roofline"]["model_flops"])
+                r["roofline"]["model_flops"], hw=topo.hardware,
+                link=topo.default_link,
+                n_messages=msgs.get("total", 0.0))
             r["collectives"] = coll
+            r["collective_messages"] = msgs
             r["roofline"] = terms.to_dict()
             changed += 1
         with open(path, "w") as f:

@@ -23,9 +23,11 @@ from repro.core.adaptk import DensityPolicy
 from repro.core.compressors import CompressorSpec, get_compressor
 from repro.core.error_feedback import BACKENDS
 
-# The wire-strategy vocabulary (DESIGN.md §3-§4, §7).  Single source:
-# ``dist.layout`` / ``dist.aggregate`` re-export it from here.
-STRATEGIES = ("allgather", "gtopk", "hierarchical")
+# The wire-strategy vocabulary (DESIGN.md §3-§4, §7, §14).  Single
+# source: ``dist.layout`` / ``dist.aggregate`` re-export it from here.
+# ``hier_gtopk`` is the two-level hybrid: pod-level gather/compress like
+# ``hierarchical``, then gTop-k recursive doubling across the pod axis.
+STRATEGIES = ("allgather", "gtopk", "hierarchical", "hier_gtopk")
 
 # Compressor spelling for Dense-SGD (no sparsification, dense all-reduce).
 DENSE = "none"

@@ -36,6 +36,15 @@ Step 3-4 is the ``strategy`` choice (DESIGN.md §3, §7):
                     merge re-selection is credited back to the merging
                     workers' residuals (divided by the replica count of
                     that merge) so Eq. (2) conservation holds globally.
+``"hier_gtopk"``    the two-level hybrid (DESIGN.md §14): pod-level
+                    gather + second error-fed compression exactly as
+                    ``"hierarchical"``, then gTop-k recursive doubling
+                    across the ``pod`` axis instead of the pod-mean
+                    gather — ``O(W_inner + log2 n_pods)`` pairs.  Outer
+                    merge drops are credited into ``resid2`` UN-divided
+                    by ``n_pods``: ``resid2`` is pod-replicated, so one
+                    representative worker per pod recovers the dropped
+                    mass exactly once (the ``hierarchical`` convention).
 
 TWO dispatch granularities implement the same semantics (DESIGN.md §10):
 
@@ -48,7 +57,8 @@ TWO dispatch granularities implement the same semantics (DESIGN.md §10):
                           wire is ONE concatenated codec block per level
                           per step — 1 all-gather (allgather), 2
                           (hierarchical), log2(W) merged ppermute rounds
-                          total (gtopk), independent of leaf count.
+                          total (gtopk), 1 + log2(n_pods) (hier_gtopk),
+                          independent of leaf count.
 
 ``momentum_correction > 0`` enables the DGC §3.1 client-side momentum
 blend: ``v = mu*v + g; u = e + v``; coordinates that make it onto the
@@ -586,8 +596,13 @@ def _wire_config(strategy: str, axes, resid2, world: int,
     """Validate the wire configuration (single source for both dispatch
     granularities).  ``strategy`` arrives already normalized — the config
     layer (``CompressionConfig`` / ``resolve_strategy``) owns the
-    vocabulary.  Returns ``(strategy, hier, gtopk, outer_axis,
-    inner_axes, n_pods, n_inner, world)``."""
+    vocabulary.  Returns ``(strategy, hier, gtopk, outer_gtopk,
+    outer_axis, inner_axes, n_pods, n_inner, world)``.
+
+    ``hier`` selects the two-level pod -> global split (strategies
+    ``"hierarchical"`` and ``"hier_gtopk"``); ``outer_gtopk`` further
+    selects the hybrid's recursive-doubling merge across the pod axis
+    in place of the pod-level gather/average."""
     if strategy not in STRATEGIES:
         raise ValueError(f"unknown strategy {strategy!r}; have {STRATEGIES}")
     if adaptive and mc > 0.0:
@@ -604,10 +619,11 @@ def _wire_config(strategy: str, axes, resid2, world: int,
     # without a second residual the two-level path cannot run; fall back
     # to the flat gather over ALL data axes rather than silently dropping
     # the outer (pod) contribution
-    hier = (strategy == "hierarchical" and len(axes) > 1
+    hier = (strategy in ("hierarchical", "hier_gtopk") and len(axes) > 1
             and resid2 is not None)
-    if strategy == "hierarchical" and not hier:
+    if strategy in ("hierarchical", "hier_gtopk") and not hier:
         strategy = "allgather"
+    outer_gtopk = strategy == "hier_gtopk"
     gtopk = strategy == "gtopk"
     if gtopk:
         # the reducer's round count must match the actual mesh, so derive
@@ -631,11 +647,15 @@ def _wire_config(strategy: str, axes, resid2, world: int,
         outer_axis, inner_axes = axes[0], axes[1:]
         n_pods = compat.axis_size(outer_axis)
         n_inner = max(1, world // n_pods)
+        if outer_gtopk:
+            # the hybrid's outer merge is the recursive-doubling tree,
+            # so the pod count must halve exactly at every round
+            _log2_exact(n_pods, "pod-axis size")
     else:
         outer_axis, inner_axes = None, axes
         n_pods, n_inner = 1, world
-    return strategy, hier, gtopk, outer_axis, inner_axes, n_pods, n_inner, \
-        world
+    return strategy, hier, gtopk, outer_gtopk, outer_axis, inner_axes, \
+        n_pods, n_inner, world
 
 
 def _adaptive_allocation(adapt_state, sigs, sqs, dims, ratio, policy, step,
@@ -754,9 +774,9 @@ def _aggregate_compressed(grads, resid, config: CompressionConfig,
     axes = tuple(data_axes)
     mc = float(config.momentum_correction)
     adaptive = density_policy is not None
-    strategy, hier, gtopk, outer_axis, inner_axes, n_pods, n_inner, world = \
-        _wire_config(config.strategy, axes, resid2, world, mc,
-                     adaptive, spec)
+    strategy, hier, gtopk, outer_gtopk, outer_axis, inner_axes, n_pods, \
+        n_inner, world = _wire_config(config.strategy, axes, resid2, world,
+                                      mc, adaptive, spec)
     use_v = mc > 0.0
 
     path_leaves, treedef = jax.tree_util.tree_flatten_with_path(grads)
@@ -862,8 +882,20 @@ def _aggregate_compressed(grads, resid, config: CompressionConfig,
                 new_r2 = (u2.reshape(model_size, d_row) -
                           _decode_rows(v2, i2, d_row, jnp.float32)
                           ).reshape(-1).astype(r2.dtype)
-            mean = _gather_mean(v2, i2, outer_axis, n_pods, d_row,
-                                jnp.float32)
+            if outer_gtopk:
+                # hybrid outer level: gTop-k recursive doubling across
+                # the pod axis.  Merge drop is credited to resid2
+                # UN-divided by n_pods — resid2 is pod-replicated, so
+                # summing one representative worker per pod recovers the
+                # dropped mass exactly once (same convention as the
+                # pod-level residual itself)
+                dense2, drop2 = _gtopk_reduce(
+                    v2, i2, (outer_axis,), d_row, k_cap, codec_dtype)
+                mean = dense2 / n_pods
+                new_r2 = new_r2 + drop2.reshape(-1).astype(new_r2.dtype)
+            else:
+                mean = _gather_mean(v2, i2, outer_axis, n_pods, d_row,
+                                    jnp.float32)
             nnz_local += codec.nnz(i2).astype(jnp.float32)
         elif use_v:
             new_r2 = new_v
@@ -1002,6 +1034,7 @@ def aggregate_bucketed(grads, resid, layout: BucketLayout, config,
       allgather      1 sparse all-gather     (per-leaf: L)
       hierarchical   1 per pod level = 2     (per-leaf: 2·L)
       gtopk          log2(W) ppermute rounds (per-leaf: L·log2(W))
+      hier_gtopk     1 + log2(P) rounds      (per-leaf: L·(1+log2 P))
 
     ``ratio``/``model_size`` come from the layout (which must have been
     built for this config's ``spec`` and density mode — validated
@@ -1040,9 +1073,9 @@ def _aggregate_bucketed(grads, resid, layout: BucketLayout,
             f"layout adaptive={layout.adaptive} does not match "
             f"density_policy={'set' if adaptive else 'None'}; rebuild the "
             "layout with the matching density_policy")
-    strategy, hier, gtopk, outer_axis, inner_axes, n_pods, n_inner, world = \
-        _wire_config(config.strategy, axes, resid2, world, mc,
-                     adaptive, spec)
+    strategy, hier, gtopk, outer_gtopk, outer_axis, inner_axes, n_pods, \
+        n_inner, world = _wire_config(config.strategy, axes, resid2, world,
+                                      mc, adaptive, spec)
 
     M, D = layout.model_size, layout.d_row_total
     G = pack_grads(layout, grads, resid.dtype)
@@ -1103,7 +1136,16 @@ def _aggregate_bucketed(grads, resid, layout: BucketLayout,
         v2, i2, new_R2, _ = bucket_compress(
             g2, R2, layout, spec, key, codec_dtype=codec_dtype,
             backend=backend, k_alloc=k_alloc, key_fold=1)
-        mean = _gather_mean(v2, i2, outer_axis, n_pods, D, jnp.float32)
+        if outer_gtopk:
+            # hybrid outer level: one gTop-k merge tree across the pod
+            # axis per step; merge drop credited un-divided by n_pods
+            # (pod-replicated resid2 — same convention as per-leaf)
+            dense2, drop2 = _gtopk_reduce_bucket(
+                v2, i2, (outer_axis,), layout, codec_dtype)
+            mean = dense2 / n_pods
+            new_R2 = new_R2 + drop2.astype(new_R2.dtype)
+        else:
+            mean = _gather_mean(v2, i2, outer_axis, n_pods, D, jnp.float32)
         nnz_local += codec.nnz(i2).astype(jnp.float32)
     elif mc > 0.0:
         new_R2 = new_V
@@ -1174,7 +1216,8 @@ def aggregate_bucketed_chunked(grads, resid, layout: BucketLayout,
     not a wire message).
 
     Dispatch cost: ``plan.n_chunks`` collectives per wire level (N
-    all-gathers / 2N for hierarchical / N·log2(W) gTop-k rounds) —
+    all-gathers / 2N for hierarchical / N·log2(W) gTop-k rounds /
+    N·(1+log2 P) for hier_gtopk) —
     reported in ``metrics["collectives_per_step"]``; total wire volume
     is unchanged.  ``plan`` must tile this exact ``layout`` (validated
     loudly).  Returns an :class:`AggregateResult` with flat-bucket
@@ -1213,9 +1256,9 @@ def _aggregate_bucketed_chunked(grads, resid, layout: BucketLayout,
             f"density_policy={'set' if adaptive else 'None'}; rebuild the "
             "layout with the matching density_policy")
     validate_chunk_plan(layout, plan)
-    strategy, hier, gtopk, outer_axis, inner_axes, n_pods, n_inner, world = \
-        _wire_config(config.strategy, axes, resid2, world, mc,
-                     adaptive, spec)
+    strategy, hier, gtopk, outer_gtopk, outer_axis, inner_axes, n_pods, \
+        n_inner, world = _wire_config(config.strategy, axes, resid2, world,
+                                      mc, adaptive, spec)
 
     M, D = layout.model_size, layout.d_row_total
     E = resid.reshape(M, D)
@@ -1300,8 +1343,14 @@ def _aggregate_bucketed_chunked(grads, resid, layout: BucketLayout,
             v2, i2, new_R2c, _ = bucket_compress(
                 g2, R2s[c], view, spec, key, codec_dtype=codec_dtype,
                 backend=backend, k_alloc=ka, key_fold=1)
-            mean_c = _gather_mean(v2, i2, outer_axis, n_pods,
-                                  view.d_row_total, jnp.float32)
+            if outer_gtopk:
+                dense2, drop2 = _gtopk_reduce_bucket(
+                    v2, i2, (outer_axis,), view, codec_dtype)
+                mean_c = dense2 / n_pods
+                new_R2c = new_R2c + drop2.astype(new_R2c.dtype)
+            else:
+                mean_c = _gather_mean(v2, i2, outer_axis, n_pods,
+                                      view.d_row_total, jnp.float32)
             nnz_local += codec.nnz(i2).astype(jnp.float32)
         elif mc > 0.0:
             new_R2c = new_Vc

@@ -102,11 +102,17 @@ def strategy_wire_pairs(strategy: str, world: int, n_pods: int = 1) -> int:
                                         every worker)
       hierarchical  ``W_inner + P_pod`` (pod gather + pod-mean gather)
       gtopk         ``log2(W)``         (one pair sent per halving round)
+      hier_gtopk    ``W_inner + log2(P_pod)``
+                                        (pod gather + recursive-doubling
+                                        rounds across pods)
     """
     if strategy == "gtopk":
         return _log2_exact(world)
     if strategy == "hierarchical":
         return max(1, world // n_pods) + n_pods
+    if strategy == "hier_gtopk":
+        return max(1, world // n_pods) + _log2_exact(n_pods,
+                                                     "pod-axis size")
     if strategy == "allgather":
         return world
     raise ValueError(f"unknown strategy {strategy!r}; have {STRATEGIES}")
@@ -119,12 +125,15 @@ def collective_count(strategy: str, world: int, n_pods: int = 1,
     ``leaves=1`` is the bucketed pipeline (the whole point: one wire
     message per level); ``leaves=L`` models the per-leaf loop.  gTop-k
     counts its ppermute rounds, the gather strategies their all-gathers
-    (one per level).
+    (one per level); the hybrid is one inner gather plus ``log2(P)``
+    outer ppermute rounds.
     """
     if strategy == "gtopk":
         return leaves * _log2_exact(world)
     if strategy == "hierarchical":
         return leaves * 2
+    if strategy == "hier_gtopk":
+        return leaves * (1 + _log2_exact(n_pods, "pod-axis size"))
     if strategy == "allgather":
         return leaves
     raise ValueError(f"unknown strategy {strategy!r}; have {STRATEGIES}")

@@ -30,6 +30,7 @@ from repro.dist import sharding as shd  # noqa: E402
 from repro.dist.aggregate import resolve_strategy  # noqa: E402
 from repro.launch import hlo_cost  # noqa: E402
 from repro.launch import roofline as rl  # noqa: E402
+from repro.launch import topo as topo_mod  # noqa: E402
 from repro.launch.mesh import (data_axes_of, data_world_size,  # noqa: E402
                                make_production_mesh, model_axis_size)
 from repro.models import init_cache, init_params  # noqa: E402
@@ -142,9 +143,11 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, compressor: str,
             hierarchical: bool = False, ratio: float = 0.001,
             codec_dtype=None, hlo_dir: str = "experiments/hlo",
             serve_mode: str = "2d", shard_activations: bool = False,
-            strategy: str = "allgather") -> dict:
+            strategy: str = "allgather", topo=None) -> dict:
     strategy = resolve_strategy(strategy, hierarchical)
-    hierarchical = strategy == "hierarchical"
+    hierarchical = strategy in ("hierarchical", "hier_gtopk")
+    if topo is None:
+        topo = topo_mod.DEFAULT_TOPOLOGY
     cfg = _bf16(get_config(arch))
     if shard_activations:
         import dataclasses
@@ -197,9 +200,10 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, compressor: str,
         total_p, active_p = rl.active_params(pshapes, cfg)
         mf_global = rl.model_flops(cfg, total_p, active_p, shape.kind,
                                    shape.global_batch, shape.seq_len)
-        terms = rl.roofline_terms(hc["flops"], hc["bytes"],
-                                  coll.get("total", 0.0),
-                                  mf_global / chips)
+        terms = rl.roofline_terms(
+            hc["flops"], hc["bytes"], coll.get("total", 0.0),
+            mf_global / chips, hw=topo.hardware, link=topo.default_link,
+            n_messages=hc.get("collective_messages", {}).get("total", 0.0))
         rec.update(
             status="OK",
             chips=chips,
@@ -215,6 +219,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, compressor: str,
                                   ma.alias_size_in_bytes),
             ),
             collectives={k: v for k, v in coll.items()},
+            collective_messages=dict(hc.get("collective_messages", {})),
             xla_cost={"flops": float(ca.get("flops", 0.0)),
                       "bytes_accessed": float(ca.get("bytes accessed", 0.0))},
             roofline=terms.to_dict(),
@@ -234,9 +239,14 @@ def main():
                                                          "both"])
     ap.add_argument("--compressor", default="gaussiank")
     ap.add_argument("--strategy", default="allgather",
-                    choices=["allgather", "gtopk", "hierarchical"])
+                    choices=["allgather", "gtopk", "hierarchical",
+                             "hier_gtopk"])
     ap.add_argument("--hierarchical", action="store_true",
                     help="deprecated alias for --strategy hierarchical")
+    ap.add_argument("--topology", default="",
+                    help="JSON topology descriptor (launch/topo.py) that "
+                         "prices the roofline terms; default: the "
+                         "built-in TPU-v5e spec")
     ap.add_argument("--ratio", type=float, default=0.001)
     ap.add_argument("--codec-dtype", default=None,
                     help="wire dtype for codec values, e.g. bfloat16")
@@ -257,6 +267,8 @@ def main():
             results = json.load(f)
     cdt = jnp.dtype(args.codec_dtype) if args.codec_dtype else None
     strategy = resolve_strategy(args.strategy, args.hierarchical)
+    topo = (topo_mod.load_topology(args.topology) if args.topology
+            else topo_mod.DEFAULT_TOPOLOGY)
     done = {(r["arch"], r["shape"], r["mesh"], r.get("compressor"),
              r.get("strategy",
                    "hierarchical" if r.get("hierarchical") else "allgather"),
@@ -279,7 +291,8 @@ def main():
                 rec = run_one(arch, shape, mp, args.compressor,
                               ratio=args.ratio, strategy=strategy,
                               codec_dtype=cdt, serve_mode=args.serve_mode,
-                              shard_activations=args.shard_activations)
+                              shard_activations=args.shard_activations,
+                              topo=topo)
                 status = rec["status"]
                 extra = ""
                 if status == "OK":

@@ -12,6 +12,8 @@ unrolled FLOPs).  This module re-derives the three roofline inputs from
   bytes      operand+result bytes of non-fused instructions (fusion
              internals stay in registers/VMEM), scaled by trip counts
   coll       collective operand bytes by op type, scaled by trip counts
+  msgs       collective dispatch counts by op type (the ``n_messages``
+             multiplier of the roofline alpha term), scaled by trips
 
 This is an estimator, not a simulator — but it is consistent across
 configs and captures the loop structure, which is what the §Roofline
@@ -243,6 +245,7 @@ def analyze(hlo: str) -> Dict[str, float]:
         memo[key] = {"flops": 0.0, "bytes": 0.0}  # break cycles defensively
         flops = byts = 0.0
         coll: Dict[str, float] = {}
+        msgs: Dict[str, float] = {}
         for ins in comps.get(comp, []):
             op = ins.op
             if op.endswith("-done"):
@@ -269,6 +272,9 @@ def analyze(hlo: str) -> Dict[str, float]:
             if base in _COLLECTIVES:
                 c, b = _coll_bytes(ins)
                 coll[c] = coll.get(c, 0.0) + b * 1.0
+                # dispatch count — the n_messages multiplier of the
+                # roofline alpha term (start/done pairs count once)
+                msgs[c] = msgs.get(c, 0.0) + 1.0
             if not fused and base not in ("parameter", "constant",
                                           "get-tuple-element", "tuple",
                                           "bitcast", "reshape"):
@@ -304,17 +310,23 @@ def analyze(hlo: str) -> Dict[str, float]:
                 for k, v in sub.items():
                     if k.startswith("coll:"):
                         coll[k[5:]] = coll.get(k[5:], 0.0) + ins.trip * v
+                    elif k.startswith("msg:"):
+                        msgs[k[4:]] = msgs.get(k[4:], 0.0) + ins.trip * v
         out = {"flops": flops, "bytes": byts}
         for k, v in coll.items():
             out["coll:" + k] = v
+        for k, v in msgs.items():
+            out["msg:" + k] = v
         memo[key] = out
         return out
 
     root = cost("__entry__", False)
     coll = {k[5:]: v for k, v in root.items() if k.startswith("coll:")}
     coll["total"] = sum(coll.values())
+    msgs = {k[4:]: v for k, v in root.items() if k.startswith("msg:")}
+    msgs["total"] = sum(msgs.values())
     return {"flops": root["flops"], "bytes": root["bytes"],
-            "collectives": coll}
+            "collectives": coll, "collective_messages": msgs}
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,210 @@
+"""Real multi-process mesh entry point + the tuner validation legs.
+
+The simulated meshes everywhere else in this repo come from
+``xla_force_host_platform_device_count`` inside ONE process.  This
+module is the bridge to running the same shapes as genuinely
+multi-process meshes: every process calls :func:`initialize`
+(``jax.distributed.initialize``) and then sees the federated global
+device view, so ``make_mesh((4, 2), ...)`` spans processes.
+
+Two CLI modes (spawned by tools/launch_multihost.py):
+
+* ``--mode coordinate`` — one instance per process.  Initializes the
+  process group against the coordinator and asserts the federation is
+  coherent: ``process_index``/``process_count`` match the spawn, and
+  the global device count is ``num_processes x local devices``.  No
+  cross-process computation runs here — the CPU backend federates
+  devices but refuses multiprocess computations ("Multiprocess
+  computations aren't implemented on the CPU backend"), so on CPU CI
+  this leg validates coordination only.  On a real accelerator fleet
+  the same entry point gives a computing mesh.
+* ``--mode validate`` — single process over forced host devices.  The
+  tuner acceptance leg: measure the live topology
+  (:func:`repro.launch.topo.measure_topology`), predict every
+  candidate strategy's wire time (:func:`repro.dist.tuner.choose_strategy`),
+  measure each strategy's bare collective pattern
+  (:func:`repro.dist.tuner.measure_wire_pattern`), then assert
+
+  1. the chosen strategy's predicted wire time is within ``--factor``
+     (default 2x) of its measured time,
+  2. every candidate is within ``--loose-factor`` (sanity), and
+  3. for every pair of candidates whose *predictions* are separated by
+     more than ``--factor`` (beyond the model's own accuracy claim),
+     the measured ordering agrees — a tie-aware "predicted ranking ==
+     measured ranking" that never asserts an ordering the model itself
+     calls a coin flip.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+
+__all__ = ["initialize", "coordination_report", "validate_tuner"]
+
+
+def initialize(coordinator: str, num_processes: int, process_id: int):
+    """``jax.distributed.initialize`` with explicit arguments (the env
+    autodetection paths are cluster-specific; the spawner always knows
+    the three values)."""
+    import jax
+
+    jax.distributed.initialize(coordinator_address=coordinator,
+                               num_processes=num_processes,
+                               process_id=process_id)
+    return jax
+
+
+def coordination_report(num_processes: int, process_id: int) -> dict:
+    """Assert the federated device view is coherent; return a summary."""
+    import jax
+
+    local = len(jax.local_devices())
+    glob = len(jax.devices())
+    rep = {
+        "process_id": process_id,
+        "process_index": jax.process_index(),
+        "process_count": jax.process_count(),
+        "local_devices": local,
+        "global_devices": glob,
+        "platform": jax.devices()[0].platform,
+    }
+    assert rep["process_index"] == process_id, rep
+    assert rep["process_count"] == num_processes, rep
+    assert glob == num_processes * local, rep
+    return rep
+
+
+def _parse_mesh(mesh_str: str):
+    dims = tuple(int(x) for x in mesh_str.split("x"))
+    axes = ("pod", "data", "model")[-len(dims):]
+    return dims, axes
+
+
+def validate_tuner(mesh, *, ratio: float = 0.05, factor: float = 2.0,
+                   loose_factor: float = 4.0, reps: int = 7) -> dict:
+    """Predicted vs measured wire time on the live mesh (docstring
+    above, mode ``validate``).  Returns the report dict; raises
+    AssertionError with the offending numbers on violation."""
+    import jax.numpy as jnp
+
+    from repro.core.compressors import get_compressor
+    from repro.dist import tuner
+    from repro.dist.layout import build_layout
+    from repro.launch import topo as topo_mod
+    from repro.launch.mesh import data_axes_of
+
+    # a payload big enough that the wire dominates scheduling noise:
+    # ~2.1M params at the given density
+    params = {"a": jnp.zeros((1024, 1024)), "b": jnp.zeros((1024, 1024)),
+              "c": jnp.zeros((4096,))}
+    spec = get_compressor("topk")
+    layout = build_layout(params, 1, ratio, spec)
+    pair_bytes = layout.pair_bits(None) / 8.0
+
+    topo = topo_mod.measure_topology(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    axes = [(a, sizes[a]) for a in data_axes_of(mesh)]
+    decision = tuner.choose_strategy(layout, axes, topo)
+
+    rows = []
+    for p in decision.predictions:
+        meas = tuner.measure_wire_pattern(mesh, pair_bytes, p.strategy,
+                                          reps=reps)
+        ratio_pm = max(p.wire_s / meas, meas / p.wire_s)
+        rows.append({"strategy": p.strategy, "predicted_s": p.wire_s,
+                     "measured_s": meas, "ratio": ratio_pm})
+    by_strategy = {r["strategy"]: r for r in rows}
+
+    chosen = by_strategy[decision.strategy]
+    assert chosen["ratio"] <= factor, (
+        f"chosen strategy {decision.strategy!r}: predicted "
+        f"{chosen['predicted_s']*1e6:.1f}us vs measured "
+        f"{chosen['measured_s']*1e6:.1f}us — ratio {chosen['ratio']:.2f} "
+        f"exceeds {factor}")
+    for r in rows:
+        assert r["ratio"] <= loose_factor, (
+            f"{r['strategy']}: predicted/measured ratio {r['ratio']:.2f} "
+            f"exceeds loose factor {loose_factor}")
+    # tie-aware ranking: only pairs the model separates beyond its own
+    # accuracy claim must order identically in measurement
+    violations = []
+    for a in rows:
+        for b in rows:
+            if a["predicted_s"] * factor < b["predicted_s"] and \
+                    a["measured_s"] >= b["measured_s"]:
+                violations.append((a["strategy"], b["strategy"]))
+    assert not violations, (
+        f"predicted ranking != measured ranking for separated pairs: "
+        f"{violations}; rows={rows}")
+
+    return {
+        "mesh": "x".join(str(n) for n in mesh.devices.shape),
+        "topology": topo.to_dict(),
+        "decision": decision.to_dict(),
+        "pair_bytes": pair_bytes,
+        "factor": factor,
+        "loose_factor": loose_factor,
+        "strategies": rows,
+        "predicted_order": [p.strategy for p in sorted(
+            decision.predictions, key=lambda p: p.wire_s)],
+        "measured_order": [r["strategy"] for r in sorted(
+            rows, key=lambda r: r["measured_s"])],
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--mode", choices=["coordinate", "validate"],
+                    required=True)
+    ap.add_argument("--coordinator", default="127.0.0.1:7621")
+    ap.add_argument("--num-processes", type=int, default=2)
+    ap.add_argument("--process-id", type=int, default=0)
+    ap.add_argument("--mesh", default="2x2x2")
+    ap.add_argument("--ratio", type=float, default=0.05)
+    ap.add_argument("--factor", type=float, default=2.0)
+    ap.add_argument("--loose-factor", type=float, default=4.0)
+    ap.add_argument("--reps", type=int, default=7)
+    ap.add_argument("--json", default="",
+                    help="write the validate-mode report here")
+    args = ap.parse_args(argv)
+
+    if args.mode == "coordinate":
+        initialize(args.coordinator, args.num_processes, args.process_id)
+        rep = coordination_report(args.num_processes, args.process_id)
+        print(f"coordinate p{args.process_id}: {json.dumps(rep)}")
+        print(f"COORDINATE OK p{args.process_id}")
+        return 0
+
+    import jax
+
+    dims, axes = _parse_mesh(args.mesh)
+    need = math.prod(dims)
+    have = len(jax.devices())
+    if have < need:
+        print(f"validate: need {need} devices for mesh {args.mesh}, "
+              f"have {have} — set XLA_FLAGS="
+              f"--xla_force_host_platform_device_count={need}",
+              file=sys.stderr)
+        return 2
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh(dims, axes)
+    rep = validate_tuner(mesh, ratio=args.ratio, factor=args.factor,
+                         loose_factor=args.loose_factor, reps=args.reps)
+    for r in rep["strategies"]:
+        print(f"  {r['strategy']}: predicted {r['predicted_s']*1e6:.1f}us "
+              f"measured {r['measured_s']*1e6:.1f}us ratio {r['ratio']:.2f}")
+    print(f"  predicted order: {rep['predicted_order']}")
+    print(f"  measured order:  {rep['measured_order']}")
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(rep, f, indent=1)
+    print(f"VALIDATE OK mesh={args.mesh} chosen={rep['decision']['strategy']}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,20 +1,35 @@
 """Roofline-term extraction from compiled dry-run artifacts.
 
-Hardware constants: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
-~50 GB/s/link ICI.  The compiled module is the per-device SPMD program, so
-``cost_analysis()`` FLOPs/bytes and the parsed collective operand bytes are
-per-chip; the spec's ``X_global / (chips · rate)`` therefore reduces to
-``X_per_chip / rate``.
+Pricing is parameterised by an explicit hardware/link model
+(``launch/topo.py``) instead of module globals: compute and HBM terms
+come from a :class:`~repro.launch.topo.HardwareSpec`, and the wire term
+uses the alpha-beta model ``n_messages * alpha + bytes / beta`` of a
+:class:`~repro.launch.topo.LinkSpec`.  The old bandwidth-only pricing
+(zero per-message latency) made gTop-k's log2(W) latency-bound rounds
+cost ~nothing, inverting strategy comparisons at small k — callers that
+know their collective dispatch count should pass ``n_messages``.
+
+Defaults (``DEFAULT_HW``/``DEFAULT_LINK``, TPU v5e: 197 TFLOP/s bf16
+per chip, 819 GB/s HBM, ~50 GB/s/link ICI) reproduce the legacy
+constants; the legacy ``PEAK_FLOPS``/``HBM_BW``/``LINK_BW`` names are
+kept as read-only aliases for old call sites and JSON consumers.
+
+The compiled module is the per-device SPMD program, so
+``cost_analysis()`` FLOPs/bytes and the parsed collective operand bytes
+are per-chip; the spec's ``X_global / (chips * rate)`` therefore
+reduces to ``X_per_chip / rate``.
 """
 from __future__ import annotations
 
 import re
 from dataclasses import asdict, dataclass
-from typing import Dict
+from typing import Dict, Optional
 
-PEAK_FLOPS = 197e12      # bf16 / chip
-HBM_BW = 819e9           # bytes/s / chip
-LINK_BW = 50e9           # bytes/s / link
+from repro.launch.topo import DEFAULT_HW, DEFAULT_LINK, HardwareSpec, LinkSpec
+
+PEAK_FLOPS = DEFAULT_HW.peak_flops   # legacy aliases — see module docstring
+HBM_BW = DEFAULT_HW.hbm_bw
+LINK_BW = DEFAULT_LINK.beta_Bps
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
@@ -28,7 +43,10 @@ _COLL_RE = re.compile(
     r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
     r"(-start|-done)?\(")
 _GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
-_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+# iota form: replica_groups=[groups,group_size]<=[dims...](perm) — the
+# reshape/transpose tail is optional and the dims list may have any
+# arity, so only the two leading fields are structural.
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\](?:<=\[[\d,]+\])?")
 
 
 def _shape_bytes(text: str) -> int:
@@ -44,12 +62,30 @@ def _shape_bytes(text: str) -> int:
     return total
 
 
-def collective_bytes(hlo_text: str) -> Dict[str, float]:
-    """Sum of collective *operand* bytes per op type, parsed from the
-    (per-device) HLO.  all-gather operands are result/group_size;
-    reduce-scatter operands are result*group_size; the rest match their
-    results."""
-    out: Dict[str, float] = {}
+def _result_bytes(shape_txt: str, phase: Optional[str]) -> int:
+    """Bytes of a collective's true result shape.
+
+    Async ``-start`` ops return a tuple whose leading elements alias the
+    operands (``(operand, result[, context...])``); summing the whole
+    tuple double-counts the payload.  Use the largest real-dtype element
+    of the tuple — the gathered/reduced result — instead."""
+    if phase == "-start" and shape_txt.startswith("("):
+        sized = []
+        for dt, dims in _SHAPE_RE.findall(shape_txt):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            sized.append(n * _DTYPE_BYTES[dt])
+        return max(sized) if sized else 0
+    return _shape_bytes(shape_txt)
+
+
+def collective_ops(hlo_text: str):
+    """Yield ``(op, result_bytes, group_size)`` per collective instruction
+    in the (per-device) HLO, skipping ``-done`` halves of async pairs."""
     for line in hlo_text.splitlines():
         m = _COLL_RE.search(line)
         if not m:
@@ -57,7 +93,7 @@ def collective_bytes(hlo_text: str) -> Dict[str, float]:
         shape_txt, op, phase = m.group(1), m.group(2), m.group(3)
         if phase == "-done":  # avoid double counting async pairs
             continue
-        rb = _shape_bytes(shape_txt)
+        rb = _result_bytes(shape_txt, phase)
         gsize = 1
         gm = _GROUPS_RE.search(line)
         if gm:
@@ -66,6 +102,17 @@ def collective_bytes(hlo_text: str) -> Dict[str, float]:
             gm2 = _GROUPS_IOTA_RE.search(line)
             if gm2:
                 gsize = int(gm2.group(2))
+        yield op, rb, gsize
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum of collective *wire* bytes per op type, parsed from the
+    (per-device) HLO.  all-gather operands are result/group_size;
+    reduce-scatter operands are result*group_size; collective-permute
+    moves exactly its result once; all-reduce/all-to-all match their
+    results."""
+    out: Dict[str, float] = {}
+    for op, rb, gsize in collective_ops(hlo_text):
         if op == "all-gather" and gsize:
             b = rb / gsize
         elif op == "reduce-scatter":
@@ -73,6 +120,16 @@ def collective_bytes(hlo_text: str) -> Dict[str, float]:
         else:
             b = rb
         out[op] = out.get(op, 0.0) + b
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+def collective_messages(hlo_text: str) -> Dict[str, float]:
+    """Count of collective dispatches per op type (the ``n_messages``
+    multiplier of the alpha term; async start/done pairs count once)."""
+    out: Dict[str, float] = {}
+    for op, _rb, _g in collective_ops(hlo_text):
+        out[op] = out.get(op, 0.0) + 1.0
     out["total"] = sum(v for k, v in out.items() if k != "total")
     return out
 
@@ -88,49 +145,72 @@ class Roofline:
     dominant: str
     model_flops: float
     useful_ratio: float
+    n_messages: float = 0.0
+    hardware: str = DEFAULT_HW.name
 
     def to_dict(self):
         return asdict(self)
 
 
 def roofline_terms(flops: float, bytes_accessed: float, coll_bytes: float,
-                   model_flops_per_chip: float) -> Roofline:
-    c = flops / PEAK_FLOPS
-    m = bytes_accessed / HBM_BW
-    n = coll_bytes / LINK_BW
+                   model_flops_per_chip: float,
+                   hw: Optional[HardwareSpec] = None,
+                   link: Optional[LinkSpec] = None,
+                   n_messages: float = 0.0) -> Roofline:
+    """Price a step: compute/memory terms under ``hw`` (default: the
+    legacy TPU-v5e spec) and the wire term under the alpha-beta model
+    ``n_messages * link.alpha_s + coll_bytes / link.beta_Bps``.  With
+    ``n_messages=0`` (the default for callers that only know bytes) the
+    wire term reduces to the legacy bandwidth-only estimate."""
+    hw = DEFAULT_HW if hw is None else hw
+    link = DEFAULT_LINK if link is None else link
+    c = flops / hw.peak_flops
+    m = bytes_accessed / hw.hbm_bw
+    n = link.time_s(n_messages, coll_bytes)
     dom = max(("compute", c), ("memory", m), ("collective", n),
               key=lambda t: t[1])[0]
     return Roofline(flops, bytes_accessed, coll_bytes, c, m, n, dom,
                     model_flops_per_chip,
-                    model_flops_per_chip / flops if flops else 0.0)
+                    model_flops_per_chip / flops if flops else 0.0,
+                    n_messages, hw.name)
 
 
 def overlapped_collective_s(compute_s: float, collective_s: float,
-                            n_chunks: int = 1) -> float:
+                            n_chunks: int = 1,
+                            chunk_alpha_s: float = 0.0) -> float:
     """Step-time estimate of the chunked overlapped schedule
     (DESIGN.md §11).
 
     Serial (``n_chunks <= 1``): compute + wire back-to-back.  With N
     chunks the software pipeline runs chunk c's collective while chunk
     c±1 computes, so the longer phase is exposed in full and the shorter
-    one only for the pipeline fill/drain — ``max + min/N``.  Equals the
-    serial time at N=1 and decreases monotonically toward ``max`` as N
-    grows (property-tested in tests/test_hlo_cost.py)."""
+    one only for the pipeline fill/drain — ``max + min/N``.  Chunking
+    also multiplies the dispatch count: each extra chunk re-pays the
+    per-message latency, adding ``(N-1) * chunk_alpha_s`` (the alpha
+    cost of one chunk's worth of collectives).  With the default
+    ``chunk_alpha_s=0`` this equals the serial time at N=1 and decreases
+    monotonically toward ``max`` as N grows (property-tested in
+    tests/test_hlo_cost.py); with a real alpha there is a finite optimal
+    N beyond which latency overhead wins."""
     if n_chunks <= 1:
         return compute_s + collective_s
     lo, hi = sorted((float(compute_s), float(collective_s)))
-    return hi + lo / n_chunks
+    return hi + lo / n_chunks + (n_chunks - 1) * chunk_alpha_s
 
 
-def overlap_report(r: Roofline, n_chunks: int) -> Dict[str, float]:
+def overlap_report(r: Roofline, n_chunks: int,
+                   link: Optional[LinkSpec] = None) -> Dict[str, float]:
     """Price a compiled step under the chunked schedule: serial vs
     overlapped step seconds and the fraction of the step the pipeline
     hides.  Compute here is the roofline max of the FLOP and HBM terms
-    (whichever bounds the non-wire phase)."""
+    (whichever bounds the non-wire phase).  When the roofline carries a
+    dispatch count and a link is given, the overlapped estimate charges
+    the extra per-chunk dispatch latency."""
     compute_s = max(r.compute_s, r.memory_s)
     serial = compute_s + r.collective_s
+    chunk_alpha = (r.n_messages * link.alpha_s) if link is not None else 0.0
     overlapped = overlapped_collective_s(compute_s, r.collective_s,
-                                         n_chunks)
+                                         n_chunks, chunk_alpha)
     return {"n_chunks": float(n_chunks), "serial_s": serial,
             "overlapped_s": overlapped,
             "hidden_frac": ((serial - overlapped) / serial

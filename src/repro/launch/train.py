@@ -28,13 +28,23 @@ def parse_args(argv=None):
                          "trimmedk|histk|rtopk")
     ap.add_argument("--ratio", type=float, default=0.001)
     ap.add_argument("--strategy", default="allgather",
-                    choices=["allgather", "gtopk", "hierarchical"],
+                    choices=["allgather", "gtopk", "hierarchical",
+                             "hier_gtopk", "auto"],
                     help="sparse wire pattern: flat all-gather (O(P) "
                          "pairs), gTop-k recursive doubling (O(log P), "
-                         "power-of-two data axes), or two-level pod "
-                         "reduction")
+                         "power-of-two data axes), two-level pod "
+                         "reduction, the pod-gather + cross-pod gTop-k "
+                         "hybrid, or 'auto' — pick per mesh axis from "
+                         "the alpha-beta topology model (dist/tuner.py, "
+                         "DESIGN.md §14)")
     ap.add_argument("--hierarchical", action="store_true",
                     help="deprecated alias for --strategy hierarchical")
+    ap.add_argument("--topology", default="",
+                    help="JSON topology descriptor (launch/topo.py "
+                         "schema: per-axis alpha/beta links + hardware "
+                         "spec) used by --strategy auto; default: "
+                         "measure the live mesh with the startup "
+                         "ping/ramp microbenchmark")
     ap.add_argument("--backend", default="auto",
                     choices=["auto", "fused", "reference"],
                     help="compression pipeline: fused single-pass Pallas "
@@ -150,7 +160,8 @@ def main(argv=None):
 
     from repro.dist.aggregate import resolve_strategy
 
-    strategy = resolve_strategy(args.strategy, args.hierarchical)
+    strategy = (args.strategy if args.strategy == "auto"
+                else resolve_strategy(args.strategy, args.hierarchical))
     from repro.core.adaptk import DYNAMIC_COMPRESSORS, make_policy
 
     # an explicit --density-policy always wins (and a non-dynamic
@@ -194,6 +205,33 @@ def main(argv=None):
             "--chunks > 1 needs the bucketed sparse pipeline: use "
             "--pipeline bucketed with a sparse compressor (the chunked "
             "schedule re-dispatches the flat wire block, DESIGN.md §11)")
+    decision = None
+    if strategy == "auto":
+        if args.compressor == "none":
+            raise SystemExit(
+                "--strategy auto tunes the sparse wire pattern; it is "
+                "meaningless with --compressor none (dense all-reduce)")
+        from repro.core.compressors import get_compressor
+        from repro.dist.layout import build_layout
+        from repro.dist.tuner import choose_strategy
+        from repro.launch.mesh import data_axes_of
+        from repro.launch.topo import load_topology, measure_topology
+
+        topo = (load_topology(args.topology) if args.topology
+                else measure_topology(mesh))
+        # the per-leaf pipeline has no layout of its own; the tuner only
+        # needs the bucket geometry (payload/dense sizes), so build one
+        tuner_layout = layout if layout is not None else build_layout(
+            params, model_axis_size(mesh), args.ratio,
+            get_compressor(args.compressor), density_policy=policy)
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        data_axes = [(ax, sizes[ax]) for ax in data_axes_of(mesh)]
+        decision = choose_strategy(tuner_layout, data_axes, topo)
+        strategy = decision.strategy
+        preds = " ".join(f"{p.strategy}={p.total_s * 1e6:.1f}us"
+                         for p in decision.predictions)
+        print(f"tuner: topology={decision.topology} "
+              f"axes={dict(data_axes)} -> strategy={strategy} ({preds})")
     from repro.core.compression import CompressionConfig
 
     config = CompressionConfig(
@@ -241,7 +279,8 @@ def main(argv=None):
                            layout=layout)
 
     print(f"arch={cfg.name} compressor={args.compressor} ratio={args.ratio} "
-          f"strategy={strategy} backend={args.backend} mesh={args.mesh} "
+          f"strategy={strategy}{'(auto)' if decision is not None else ''} "
+          f"backend={args.backend} mesh={args.mesh} "
           f"pipeline={args.pipeline} chunks={args.chunks} "
           f"density_policy={pol_name or 'fixed-k'} "
           f"global_k={args.global_k_policy} steps={args.steps}")
@@ -272,6 +311,10 @@ def main(argv=None):
                 comm += f" coll={int(m['collectives_per_step'])}"
             if "k_total" in m:
                 comm += f" k_total={int(m['k_total'])}"
+            if decision is not None:
+                # record the auto decision alongside the step metrics
+                comm += (f" tuner={decision.strategy}"
+                         f" pred_wire_us={decision.best.total_s * 1e6:.1f}")
             print(f"step {i:5d} loss={float(m['loss']):.4f} "
                   f"lr={float(m['lr']):.4g}{comm} "
                   f"({time.time() - t0:.1f}s)", flush=True)

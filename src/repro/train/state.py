@@ -60,11 +60,12 @@ def init_train_state(params, optimizer: Optimizer, *, workers: int,
                      **legacy) -> Dict[str, Any]:
     """``compression`` (a ``core.compression.CompressionConfig``) decides
     which auxiliary buffers the state carries.
-    ``strategy="hierarchical"`` OR ``momentum_correction > 0`` allocates
-    the second residual ``resid2`` (the two-level pod-mean residual /
-    the DGC local-momentum buffer — dist/aggregate.py); ``"allgather"``
-    and ``"gtopk"`` need only the per-worker ``resid`` (the gTop-k merge
-    drops are credited into it directly).  ``compressor="none"`` (Dense
+    ``strategy="hierarchical"``/``"hier_gtopk"`` OR
+    ``momentum_correction > 0`` allocates the second residual ``resid2``
+    (the two-level pod-mean residual / the DGC local-momentum buffer —
+    dist/aggregate.py); ``"allgather"`` and ``"gtopk"`` need only the
+    per-worker ``resid`` (the gTop-k merge drops are credited into it
+    directly).  ``compressor="none"`` (Dense
     SGD) allocates no residuals at all.  The pre-config loose kwargs
     (``strategy=``, ``hierarchical=``, ``density_policy=``) still work
     but forward through a ``DeprecationWarning`` shim.
@@ -116,7 +117,7 @@ def init_train_state(params, optimizer: Optimizer, *, workers: int,
             one = init_residuals(params, model_size, resid_dtype)
         stackw = lambda e: jnp.zeros((workers,) + e.shape, e.dtype)  # noqa: E731
         state["resid"] = jax.tree.map(stackw, one)
-        if (compression.strategy == "hierarchical"
+        if (compression.strategy in ("hierarchical", "hier_gtopk")
                 or compression.momentum_correction > 0):
             state["resid2"] = jax.tree.map(stackw, one)
         if density_policy is not None:

@@ -111,7 +111,8 @@ def test_as_config():
 
 
 def test_strategies_vocabulary():
-    assert set(STRATEGIES) == {"allgather", "gtopk", "hierarchical"}
+    assert set(STRATEGIES) == {"allgather", "gtopk", "hierarchical",
+                               "hier_gtopk"}
 
 
 # ---------------------------------------------------------------------------

@@ -39,6 +39,17 @@ def test_gtopk_semantics_match_simulation():
 
 
 @pytest.mark.slow
+def test_hier_gtopk_semantics_match_simulation():
+    """hier_gtopk hybrid (pod gather + cross-pod gTop-k, ISSUE 9) ==
+    single-process simulation at n_pods=2 (where it must equal plain
+    hierarchical bit-for-bit) and n_pods=4 (genuine multi-round outer
+    recursive doubling), with resid2 pod-replication, the two-level
+    conservation invariant, and the 1+log2(P) collective count."""
+    out = _run("hier_gtopk")
+    assert "HIER_GTOPK OK" in out
+
+
+@pytest.mark.slow
 def test_dense_dp_matches_single_device():
     out = _run("dense")
     assert "DENSE OK" in out

@@ -2,6 +2,10 @@
 with known FLOP counts (the §Roofline input pipeline), plus the chunked-
 schedule structure checks (ISSUE 6): jaxpr collective count x N under
 chunking, the backward-pass schedule seam, and the overlap cost model."""
+import gzip
+import json
+import os
+
 import pytest
 
 import jax
@@ -204,3 +208,166 @@ def test_overlap_report_prices_roofline():
         + min(compute, r.collective_s) / 4)
     assert 0.0 <= rep["hidden_frac"] < 1.0
     assert overlap_report(r, 1)["hidden_frac"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# alpha-beta wire pricing (ISSUE 9: the alpha * n_messages term)
+# ---------------------------------------------------------------------------
+
+
+def test_roofline_defaults_reproduce_legacy_pricing():
+    """With no hw/link/n_messages, roofline_terms must price exactly as
+    the old module-global constants did (PEAK_FLOPS/HBM_BW/LINK_BW are
+    kept as read-only aliases of the default specs)."""
+    from repro.launch import roofline as rl
+
+    r = rl.roofline_terms(1e15, 1e12, 1e11, 1e15)
+    assert r.compute_s == pytest.approx(1e15 / rl.PEAK_FLOPS)
+    assert r.memory_s == pytest.approx(1e12 / rl.HBM_BW)
+    assert r.collective_s == pytest.approx(1e11 / rl.LINK_BW)
+    assert r.n_messages == 0.0
+    assert r.hardware == rl.DEFAULT_HW.name
+
+
+def test_roofline_alpha_term_scales_with_messages():
+    """collective_s == n_messages * alpha + bytes / beta — the bugfix:
+    the old model priced 1000 dispatches and 1 dispatch identically."""
+    from repro.launch import roofline as rl
+    from repro.launch.topo import LinkSpec
+
+    link = LinkSpec(alpha_s=1e-5, beta_Bps=50e9)
+    base = rl.roofline_terms(1e15, 1e12, 1e11, 1e15, link=link)
+    many = rl.roofline_terms(1e15, 1e12, 1e11, 1e15, link=link,
+                             n_messages=1000)
+    assert base.collective_s == pytest.approx(1e11 / 50e9)
+    assert many.collective_s - base.collective_s == pytest.approx(1e-2)
+    assert many.n_messages == 1000
+
+
+def test_overlap_chunk_alpha_penalty():
+    """Chunking re-pays the dispatch latency per chunk: N chunks add
+    (N-1) * chunk_alpha_s, so with a real alpha there is a finite
+    optimal N instead of 'more chunks is always better'."""
+    from repro.launch.roofline import (overlap_report,
+                                      overlapped_collective_s,
+                                      roofline_terms)
+    from repro.launch.topo import LinkSpec
+
+    t4 = overlapped_collective_s(3.0, 1.0, 4, chunk_alpha_s=0.1)
+    assert t4 == pytest.approx(3.0 + 1.0 / 4 + 3 * 0.1)
+    # alpha-free monotonicity breaks once alpha is real: huge N loses
+    assert overlapped_collective_s(3.0, 1.0, 64, chunk_alpha_s=0.1) > \
+        overlapped_collective_s(3.0, 1.0, 4, chunk_alpha_s=0.1)
+
+    link = LinkSpec(alpha_s=1e-3, beta_Bps=50e9)
+    r = roofline_terms(1e15, 1e12, 1e11, 1e15, link=link, n_messages=2)
+    rep = overlap_report(r, 4, link=link)
+    compute = max(r.compute_s, r.memory_s)
+    assert rep["overlapped_s"] == pytest.approx(
+        max(compute, r.collective_s)
+        + min(compute, r.collective_s) / 4 + 3 * 2 * 1e-3)
+
+
+# ---------------------------------------------------------------------------
+# collective_bytes/_messages parser vs recorded wire-stage HLO (ISSUE 9:
+# the collective-permute / -start tuple / iota replica_groups bugfixes)
+# ---------------------------------------------------------------------------
+
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures")
+
+_WIRE_FIXTURES = ["wire_allgather_4x2", "wire_gtopk_4x2",
+                  "wire_hierarchical_2x2x2", "wire_hier_gtopk_2x2x2"]
+
+
+def _load_fixture(name):
+    with gzip.open(os.path.join(FIXTURES, name + ".hlo.gz"), "rt") as f:
+        hlo = f.read()
+    with open(os.path.join(FIXTURES, name + ".json")) as f:
+        meta = json.load(f)
+    return hlo, meta
+
+
+@pytest.mark.parametrize("name", _WIRE_FIXTURES)
+def test_collective_bytes_match_layout_ground_truth(name):
+    """Parsed per-device wire bytes of a compiled wire stage must equal
+    the layout closed form: collective_count(strategy) events, each
+    moving one codec pair (pair_bits/8 bytes).  This is what the
+    collective-permute raw-result-bytes counting has to get right — a
+    gtopk round's ppermute moves its result ONCE (no group division,
+    no group multiplication)."""
+    from repro.dist.layout import collective_count
+    from repro.launch.roofline import collective_bytes
+
+    hlo, meta = _load_fixture(name)
+    got = collective_bytes(hlo)
+    events = collective_count(meta["strategy"], meta["world"],
+                              meta["n_pods"])
+    expected = events * meta["pair_bits"] / 8
+    assert got["total"] == expected, (name, got, expected)
+    # op-class split: gathers for gather levels, permutes for rounds
+    ag = got.get("all-gather", 0.0)
+    cp = got.get("collective-permute", 0.0)
+    pair = meta["pair_bits"] / 8
+    if meta["strategy"] == "allgather":
+        assert (ag, cp) == (pair, 0.0)
+    elif meta["strategy"] == "gtopk":
+        assert (ag, cp) == (0.0, events * pair)
+    elif meta["strategy"] == "hierarchical":
+        assert (ag, cp) == (2 * pair, 0.0)
+    else:  # hier_gtopk: one inner gather + log2(P) outer rounds
+        assert (ag, cp) == (pair, (events - 1) * pair)
+
+
+@pytest.mark.parametrize("name", _WIRE_FIXTURES)
+def test_collective_messages_match_dispatch_model(name):
+    """Parsed dispatch counts must equal MSGS_PER_PAIR x the layout's
+    collective_count — each codec-pair event is two array messages
+    (values + indices), exactly the alpha-term multiplier the tuner
+    uses."""
+    from repro.dist.layout import collective_count
+    from repro.dist.tuner import MSGS_PER_PAIR
+    from repro.launch.roofline import collective_messages
+
+    hlo, meta = _load_fixture(name)
+    got = collective_messages(hlo)
+    events = collective_count(meta["strategy"], meta["world"],
+                              meta["n_pods"])
+    assert got["total"] == MSGS_PER_PAIR * events, (name, got, events)
+
+
+def test_async_start_tuple_counts_result_once():
+    """-start ops return (operand, result[, context]) tuples; the parser
+    must bill the result once, not the whole tuple (which double-counts
+    the payload), and must skip the -done half entirely."""
+    from repro.launch.roofline import collective_bytes, collective_messages
+
+    hlo = """
+  %ag = (f32[1,64]{1,0}, f32[4,64]{1,0}) all-gather-start(f32[1,64]{1,0} %p0), replica_groups={{0,1,2,3}}, dimensions={0}
+  %agd = f32[4,64]{1,0} all-gather-done((f32[1,64]{1,0}, f32[4,64]{1,0}) %ag)
+  %cp = (f32[64]{0}, f32[64]{0}, u32[], u32[]) collective-permute-start(f32[64]{0} %p1), source_target_pairs={{0,1},{1,0}}
+  %cpd = f32[64]{0} collective-permute-done((f32[64]{0}, f32[64]{0}, u32[], u32[]) %cp)
+"""
+    got = collective_bytes(hlo)
+    # all-gather: result 4*64*4 bytes / group 4 == contributed shard
+    assert got["all-gather"] == 4 * 64 * 4 / 4
+    # collective-permute: the 64-element result once — NOT the tuple sum
+    assert got["collective-permute"] == 64 * 4
+    msgs = collective_messages(hlo)
+    assert msgs == {"all-gather": 1.0, "collective-permute": 1.0,
+                    "total": 2.0}
+
+
+def test_iota_replica_groups_all_arities():
+    """replica_groups=[G,S]<=[dims...] — the iota form's dims list may
+    have any arity (and a transpose tail); only the leading [groups,
+    group_size] is structural.  The old 2-field-only regex silently fell
+    back to group_size=1, inflating all-gather bytes by the group
+    factor."""
+    from repro.launch.roofline import collective_bytes
+
+    base = "%ag = f32[8,32]{1,0} all-gather(f32[1,32]{1,0} %x), " \
+        "dimensions={0}, replica_groups="
+    for form in ("[1,8]<=[8]", "[1,8]<=[2,4]T(1,0)", "[1,8]<=[2,2,2]T(0,2,1)"):
+        got = collective_bytes(base + form + "\n")
+        assert got["all-gather"] == 8 * 32 * 4 / 8, form

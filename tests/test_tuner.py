@@ -1,0 +1,230 @@
+"""Tuner decision matrix (ISSUE 9).
+
+Pins the wire-strategy auto-tuner's selections on synthetic topologies
+across a (world, ratio, model-geometry) grid:
+
+* fat flat link (high beta, negligible alpha)  -> allgather — the
+  gather's single dispatch and one fused decode beat gTop-k's
+  serialized sort-class merge rounds when bytes are free;
+* slow flat link (low beta)                    -> gtopk — log2(W)
+  pairs on the wire beat (W-1);
+* high-alpha flat link                         -> allgather — fewest
+  dispatches wins when every message costs milliseconds;
+* asymmetric two-level (fast intra-pod link, slow + high-latency
+  inter-pod link)                              -> hier_gtopk — the
+  ISSUE 9 acceptance criterion: compress per pod, recursive-double
+  across the slow axis.
+
+Plus the selection property (the chosen strategy never predicts worse
+than any candidate), candidate validity, the exact-tie rank, and the
+topology descriptor JSON round-trip.
+"""
+import math
+
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.compressors import get_compressor
+from repro.dist import tuner
+from repro.dist.layout import build_layout
+from repro.launch.topo import (DEFAULT_LINK, HardwareSpec, LinkSpec,
+                               Topology, load_topology, save_topology)
+
+HW = HardwareSpec(name="test-hw", peak_flops=197e12, hbm_bw=819e9)
+
+FAT_FLAT = Topology(hardware=HW, default_link=LinkSpec(1e-7, 4e11),
+                    name="fat-flat")
+SLOW_FLAT = Topology(hardware=HW, default_link=LinkSpec(1e-6, 1e8),
+                     name="slow-flat")
+HIGH_ALPHA = Topology(hardware=HW, default_link=LinkSpec(5e-3, 5e10),
+                      name="high-alpha")
+ASYM = Topology(hardware=HW,
+                links=(("data", LinkSpec(1e-6, 5e10)),
+                       ("pod", LinkSpec(1e-3, 1e8))),
+                default_link=LinkSpec(1e-6, 5e10), name="asym")
+
+# (params, model_size, ratio) geometry grid — small and mid layouts at
+# two densities
+GEOMS = [
+    ({"a": (40, 30), "b": (17,)}, 1, 0.01),
+    ({"a": (40, 30), "b": (17,)}, 1, 0.05),
+    ({"a": (256, 128), "b": (1024,), "c": (64, 64)}, 2, 0.01),
+    ({"a": (256, 128), "b": (1024,), "c": (64, 64)}, 2, 0.05),
+]
+
+
+def _layout(geom):
+    shapes, msize, ratio = geom
+    params = {k: jnp.zeros(s) for k, s in shapes.items()}
+    return build_layout(params, msize, ratio, get_compressor("topk"))
+
+
+# ---------------------------------------------------------------------------
+# decision matrix
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("geom", GEOMS, ids=["s.01", "s.05", "m.01", "m.05"])
+@pytest.mark.parametrize("topo,axes,expect", [
+    (FAT_FLAT, [("data", 4)], "allgather"),
+    (FAT_FLAT, [("data", 8)], "allgather"),
+    (SLOW_FLAT, [("data", 8)], "gtopk"),
+    (HIGH_ALPHA, [("data", 4)], "allgather"),
+    (HIGH_ALPHA, [("data", 8)], "allgather"),
+], ids=["fat4", "fat8", "slow8", "alpha4", "alpha8"])
+def test_decision_matrix(geom, topo, axes, expect):
+    decision = tuner.choose_strategy(_layout(geom), axes, topo)
+    assert decision.strategy == expect, (
+        topo.name, axes,
+        [(p.strategy, p.total_s) for p in decision.predictions])
+
+
+@pytest.mark.parametrize("geom", GEOMS[2:], ids=["m.01", "m.05"])
+@pytest.mark.parametrize("axes", [[("pod", 2), ("data", 2)],
+                                  [("pod", 2), ("data", 4)]],
+                         ids=["2x2", "2x4"])
+def test_decision_matrix_asymmetric(geom, axes, ):
+    """Asymmetric two-level fabric -> the hybrid.  Payload has to be
+    large enough for the slow inter-pod bandwidth to matter: the medium
+    geometries move multi-KB pairs, so halving the pod-axis bytes beats
+    the extra intra-pod dispatch.  (On the tiny layouts the same
+    descriptor correctly picks allgather — every strategy's beta term
+    is sub-alpha there and the single dispatch wins; that regime is
+    covered by test_tiny_payload_prefers_fewest_dispatches.)"""
+    decision = tuner.choose_strategy(_layout(geom), axes, ASYM)
+    assert decision.strategy == "hier_gtopk", (
+        axes, [(p.strategy, p.total_s) for p in decision.predictions])
+
+
+def test_tiny_payload_prefers_fewest_dispatches():
+    """With a few-hundred-byte pair on a high-latency pod link, the
+    alpha term dominates and the joint gather's single dispatch wins —
+    the flip the old bandwidth-only model could not express."""
+    decision = tuner.choose_strategy(
+        _layout(GEOMS[0]), [("pod", 2), ("data", 2)], ASYM)
+    assert decision.strategy == "allgather"
+
+
+def test_asym_two_level_acceptance():
+    """The ISSUE 9 acceptance criterion verbatim: an asymmetric (2,2,2)
+    descriptor (fast intra-pod, slow + high-latency inter-pod) must
+    select the pod-gather + cross-pod gTop-k hybrid, and the hybrid
+    must strictly beat both flat strategies (not just tie-break)."""
+    decision = tuner.choose_strategy(
+        _layout(GEOMS[2]), [("pod", 2), ("data", 2)], ASYM)
+    assert decision.strategy == "hier_gtopk"
+    by = {p.strategy: p.total_s for p in decision.predictions}
+    assert by["hier_gtopk"] < by["allgather"]
+    assert by["hier_gtopk"] < by["gtopk"]
+
+
+# ---------------------------------------------------------------------------
+# selection properties
+# ---------------------------------------------------------------------------
+
+ALL_CASES = [(t, a) for t in (FAT_FLAT, SLOW_FLAT, HIGH_ALPHA, ASYM)
+             for a in ([("data", 2)], [("data", 4)], [("data", 8)],
+                       [("pod", 2), ("data", 2)], [("pod", 2), ("data", 4)],
+                       [("pod", 4), ("data", 2)], [("pod", 3), ("data", 2)])]
+
+
+@pytest.mark.parametrize("geom", GEOMS, ids=["s.01", "s.05", "m.01", "m.05"])
+def test_auto_never_predicts_worse(geom):
+    """The selection property: across every topology x mesh, the chosen
+    strategy's predicted time is the minimum over all candidates, and
+    the candidate set matches the mesh-validity rules."""
+    layout = _layout(geom)
+    for topo, axes in ALL_CASES:
+        decision = tuner.choose_strategy(layout, axes, topo)
+        assert decision.best.strategy == decision.strategy
+        best = decision.best.total_s
+        for p in decision.predictions:
+            assert best <= p.total_s + 1e-18, (topo.name, axes)
+        assert sorted(decision.considered) == sorted(
+            tuner.candidate_strategies([n for _, n in axes]))
+
+
+def test_candidate_validity():
+    assert tuner.candidate_strategies([5]) == ("allgather",)
+    assert tuner.candidate_strategies([4]) == ("allgather", "gtopk")
+    assert tuner.candidate_strategies([3, 2]) == ("allgather",
+                                                  "hierarchical")
+    assert tuner.candidate_strategies([4, 2]) == (
+        "allgather", "gtopk", "hierarchical", "hier_gtopk")
+
+
+def test_tie_rank_prefers_hybrid_at_two_pods():
+    """At n_pods=2 the hybrid and plain hierarchical are the same
+    algorithm — their predictions are exact float ties on any topology —
+    and the tie must resolve to the member that generalizes (TIE_RANK,
+    hybrid first)."""
+    layout = _layout(GEOMS[0])
+    for topo in (FAT_FLAT, SLOW_FLAT, HIGH_ALPHA, ASYM):
+        preds = {p.strategy: p for p in tuner.choose_strategy(
+            layout, [("pod", 2), ("data", 2)], topo).predictions}
+        assert preds["hier_gtopk"].total_s == preds["hierarchical"].total_s
+        order = [p.strategy for p in sorted(
+            preds.values(),
+            key=lambda p: (p.total_s, tuner.TIE_RANK[p.strategy]))]
+        assert order.index("hier_gtopk") < order.index("hierarchical")
+
+
+def test_prediction_terms_are_consistent():
+    """Wire decomposition sanity: per-axis times sum to wire_s, and the
+    alpha share of a gtopk prediction scales with the round count."""
+    layout = _layout(GEOMS[0])
+    p = tuner.predict_wire_time(
+        "gtopk", [("data", 8)], layout.pair_bits(None) / 8.0,
+        layout.model_size * layout.d_row_total * 4.0, HIGH_ALPHA,
+        d_row=layout.d_row_total)
+    assert p.messages == tuner.MSGS_PER_PAIR * 3          # log2(8) rounds
+    assert p.wire_s == pytest.approx(sum(dict(p.axis_wire_s).values()))
+    alpha = HIGH_ALPHA.default_link.alpha_s
+    assert p.wire_s >= p.messages * alpha
+
+
+# ---------------------------------------------------------------------------
+# topology descriptor round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_topology_json_roundtrip(tmp_path):
+    path = str(tmp_path / "topo.json")
+    save_topology(ASYM, path)
+    back = load_topology(path)
+    assert back == ASYM
+    assert back.link("pod").beta_Bps == 1e8
+    assert back.link("data").alpha_s == 1e-6
+    # unlisted axes fall back to the default link
+    assert back.link("nonexistent") == ASYM.default_link
+
+
+def test_topology_link_time_model():
+    link = LinkSpec(alpha_s=1e-5, beta_Bps=1e9)
+    assert link.time_s(4, 1e6) == pytest.approx(4e-5 + 1e-3)
+    assert DEFAULT_LINK.time_s(0, 5e10) == pytest.approx(1.0)
+
+
+def test_load_topology_rejects_non_object(tmp_path):
+    p = tmp_path / "bad.json"
+    p.write_text("[1, 2, 3]")
+    with pytest.raises(ValueError):
+        load_topology(str(p))
+
+
+def test_world_and_messages_scale():
+    """More workers can only add wire time on a fixed flat link (pair
+    count grows monotonically for both gather and gtopk)."""
+    layout = _layout(GEOMS[0])
+    pair = layout.pair_bits(None) / 8.0
+    dense = layout.model_size * layout.d_row_total * 4.0
+    for strategy in ("allgather", "gtopk"):
+        prev = 0.0
+        for w in (2, 4, 8, 16):
+            p = tuner.predict_wire_time(strategy, [("data", w)], pair,
+                                        dense, SLOW_FLAT,
+                                        d_row=layout.d_row_total)
+            assert p.total_s > prev, (strategy, w)
+            prev = p.total_s
+    assert math.isfinite(prev)

@@ -18,7 +18,17 @@ Three invariants over ``.github/workflows/*.yml``:
 4. the ``perf`` job (when the workflow has one) runs the train-to-serve
    delta-stream benchmark AND gates it (``--serve-measured`` /
    ``--serve-baseline``) — emitting ``BENCH_serve.json`` without gating
-   it would let the resync bit-exactness invariant rot unchecked.
+   it would let the resync bit-exactness invariant rot unchecked;
+5. the ``perf`` job likewise runs the wire-strategy tuner decision
+   benchmark AND gates it (``--tuner-measured`` / ``--tuner-baseline``)
+   — ungated, a flipped decision cell or a drifted dispatch model
+   passes CI silently;
+6. the ``multihost`` job (when the workflow has one) runs
+   ``tools/launch_multihost.py`` with BOTH legs live (no
+   ``--skip-coordinate`` / ``--skip-validate``) — the coordinate leg is
+   the only CI evidence that jax.distributed federation works, and the
+   validate leg is the only place predicted wire time meets a measured
+   collective pattern.
 
 The parser is deliberately dumb: jobs are the 2-space-indented keys of
 the ``jobs:`` block.  It fails loudly when it finds no jobs at all, so
@@ -89,6 +99,33 @@ def audit_perf(path: str, body: list) -> list:
             f"{path}: perf job emits BENCH_serve.json but does not gate "
             "it (--serve-measured/--serve-baseline) — ungated, the "
             "resync bit-exactness invariant rots unchecked")
+    if "benchmarks.tuner_decision" not in text:
+        errors.append(
+            f"{path}: perf job does not run benchmarks.tuner_decision — "
+            "the wire-strategy decision matrix must be measured in CI")
+    elif not ("--tuner-measured" in text and "--tuner-baseline" in text):
+        errors.append(
+            f"{path}: perf job emits BENCH_tuner.json but does not gate "
+            "it (--tuner-measured/--tuner-baseline) — ungated, a "
+            "flipped decision cell passes CI silently")
+    return errors
+
+
+def audit_multihost(path: str, body: list) -> list:
+    """Invariant 6: both multihost legs run for real."""
+    text = "\n".join(body)
+    errors = []
+    if "tools/launch_multihost.py" not in text:
+        errors.append(
+            f"{path}: multihost job does not run "
+            "tools/launch_multihost.py — the job exists to spawn a real "
+            "jax.distributed process group and validate the tuner")
+    for flag in ("--skip-coordinate", "--skip-validate"):
+        if flag in text:
+            errors.append(
+                f"{path}: multihost job passes {flag} — both legs must "
+                "run (coordination evidence + predicted-vs-measured "
+                "wire-time validation)")
     return errors
 
 
@@ -112,6 +149,8 @@ def audit(path: str) -> list:
             errors += audit_properties(path, body)
         if name == "perf":
             errors += audit_perf(path, body)
+        if name == "multihost":
+            errors += audit_multihost(path, body)
     return errors
 
 

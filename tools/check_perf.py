@@ -80,6 +80,15 @@ train-to-serve delta-stream gate (DESIGN.md §13):
   per-ratio ``delta-wire-*`` bits must match the committed baseline
   EXACTLY (deterministic layout geometry).
 
+tuner (``BENCH_tuner.json``, schema ``tuner/v1``, gated when
+``--tuner-measured`` / ``--tuner-baseline`` are passed) — the
+wire-strategy auto-tuner decision matrix (ISSUE 9, DESIGN.md §14).
+Everything is closed-form alpha-beta pricing, so all checks are exact:
+the asym two-level cells must decide ``hier_gtopk`` (hard acceptance
+invariant), the decided time must be the minimum over its candidates,
+and decisions + predicted message counts must match the committed
+baseline EXACTLY.
+
 ``--update`` rewrites the baseline(s) from the measured file(s) instead
 of checking (run on the reference machine, commit the result).
 
@@ -328,6 +337,70 @@ def check_serve(measured: dict, baseline: dict, tol: float) -> list:
     return errors
 
 
+TUNER_SCHEMA = "tuner/v1"
+
+
+def load_tuner(path: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    if data.get("schema") != TUNER_SCHEMA:
+        raise SystemExit(f"{path}: unexpected schema "
+                         f"{data.get('schema')!r} (want {TUNER_SCHEMA!r})")
+    return {(r["shape"], r["method"]): r for r in data["rows"]}
+
+
+def check_tuner(measured: dict, baseline: dict) -> list:
+    """Gate the wire-strategy tuner decision matrix (ISSUE 9).  Every
+    row is closed-form alpha-beta pricing, so the checks are exact:
+
+    1. acceptance invariant, within the measured file: every ``asym``
+       cell with a pod axis must decide ``hier_gtopk`` — the asymmetric
+       two-level fabric is the hybrid's reason to exist;
+    2. selection property, within the measured file: the decided row's
+       predicted time is the minimum over its ``predict-*`` candidates;
+    3. baseline pins: every baseline cell is still measured, decisions
+       match EXACTLY (a flipped cell means the cost model moved — fine
+       only as a deliberate re-pin), and the ``predict-*`` message
+       counts match EXACTLY (the closed-form dispatch model)."""
+    errors = []
+    decide_rows = [key for key in measured if key[1] == "decide"]
+    if not decide_rows:
+        errors.append("tuner: no decide rows in measured file")
+    for shape, _ in decide_rows:
+        row = measured[(shape, "decide")]
+        if shape.startswith("asym/") and "pod" in shape and \
+                row["choice"] != "hier_gtopk":
+            errors.append(
+                f"tuner decide@{shape}: chose {row['choice']!r}, not "
+                "hier_gtopk — the asymmetric two-level acceptance "
+                "criterion is broken")
+        cands = [measured[k] for k in measured
+                 if k[0] == shape and k[1].startswith("predict-")]
+        if cands and row["ms"] > min(c["ms"] for c in cands) * (1 + 1e-9):
+            errors.append(
+                f"tuner decide@{shape}: decided time {row['ms']}ms is "
+                "not the minimum over its candidates — the selection "
+                "property is broken")
+    for key, base in baseline.items():
+        got = measured.get(key)
+        if got is None:
+            errors.append(f"tuner {key[1]}@{key[0]}: missing from "
+                          "measured file")
+        elif key[1] == "decide" and got["choice"] != base["choice"]:
+            errors.append(
+                f"tuner decide@{key[0]}: choice {got['choice']!r} != "
+                f"baseline {base['choice']!r} — the cost model moved a "
+                "decision cell")
+        elif key[1].startswith("predict-") and \
+                got["passes"] != base["passes"]:
+            errors.append(
+                f"tuner {key[1]}@{key[0]}: message count {got['passes']} "
+                f"!= baseline {base['passes']} (the dispatch model is "
+                "closed-form — drift means predict_wire_time changed "
+                "shape)")
+    return errors
+
+
 RTOPK_SCHEMA = "rtopk/v1"
 
 
@@ -485,6 +558,11 @@ def main(argv=None) -> int:
                          "factor (on the CPU runner the publish encode "
                          "dominates the tiny decode step; the exactness "
                          "invariants stay hard regardless)")
+    ap.add_argument("--tuner-measured", default="",
+                    help="freshly emitted BENCH_tuner.json (enables the "
+                         "wire-strategy tuner gate)")
+    ap.add_argument("--tuner-baseline", default="",
+                    help="committed benchmarks/baselines/tuner.json")
     ap.add_argument("--update", action="store_true",
                     help="rewrite the baseline(s) from the measured file(s)")
     args = ap.parse_args(argv)
@@ -500,6 +578,9 @@ def main(argv=None) -> int:
                          "together")
     if bool(args.serve_measured) != bool(args.serve_baseline):
         raise SystemExit("--serve-measured and --serve-baseline go "
+                         "together")
+    if bool(args.tuner_measured) != bool(args.tuner_baseline):
+        raise SystemExit("--tuner-measured and --tuner-baseline go "
                          "together")
 
     if args.update:
@@ -522,6 +603,10 @@ def main(argv=None) -> int:
             load_serve(args.serve_measured)
             shutil.copyfile(args.serve_measured, args.serve_baseline)
             print(f"baseline updated: {args.serve_baseline}")
+        if args.tuner_measured:
+            load_tuner(args.tuner_measured)
+            shutil.copyfile(args.tuner_measured, args.tuner_baseline)
+            print(f"baseline updated: {args.tuner_baseline}")
         return 0
 
     errors = check(load(args.measured), load(args.baseline),
@@ -540,6 +625,9 @@ def main(argv=None) -> int:
         errors += check_serve(load_serve(args.serve_measured),
                               load_serve(args.serve_baseline),
                               args.serve_tol)
+    if args.tuner_measured:
+        errors += check_tuner(load_tuner(args.tuner_measured),
+                              load_tuner(args.tuner_baseline))
     for e in errors:
         print(f"PERF FAIL: {e}")
     if not errors:
