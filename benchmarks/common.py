@@ -8,18 +8,39 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import codec, get_compressor
+from repro.launch.env import describe_env
 from repro.models.fnn import fnn_loss, init_fnn
 from repro.optim import sgd_momentum
 
 
 def timeit(fn, *args, warmup=2, iters=5):
+    """Mean wall microseconds per call, device-complete.
+
+    ``block_until_ready`` runs INSIDE the timed loop: blocking only
+    after the loop would let every call but the last overlap its
+    successor's dispatch, timing async dispatch depth instead of the
+    kernel (methods with different dispatch counts would then compare
+    dishonestly — the exact bug ISSUE 10 audits for).
+    """
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
     for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
+        jax.block_until_ready(fn(*args))
     return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def bench_meta() -> dict:
+    """Measurement-provenance fields every BENCH_*.json records:
+    the platform the numbers were produced on and the pinned launch
+    environment (DESIGN.md §15) — gates compare like against like."""
+    return {"platform": jax.default_backend(), "env": describe_env()}
+
+
+def stamp_meta(doc: dict) -> dict:
+    """Add :func:`bench_meta` to a benchmark's JSON document in place."""
+    doc.update(bench_meta())
+    return doc
 
 
 def simulate_sparsified_sgd(compressor: str, *, workers=16, ratio=0.001,

@@ -25,7 +25,7 @@ import json
 
 import numpy as np
 
-from benchmarks.common import simulate_sparsified_sgd
+from benchmarks.common import simulate_sparsified_sgd, stamp_meta
 
 BENCH_JSON = "BENCH_adaptk.json"
 SCHEMA = ["policy", "k_total_final", "budget_exact", "share_spread",
@@ -134,8 +134,9 @@ def collect(smoke: bool = False):
     rows, fixed, run_cfg = _fig10_fig11_rows(spec, smoke, stats_trace)
     arows, bench_pol, adaptive_run = _adaptive_rows(spec, smoke,
                                                     stats_trace, run_cfg)
-    data = {"schema": SCHEMA, "smoke": smoke, "fixed": fixed,
-            "policies": bench_pol, "adaptive_run": adaptive_run}
+    data = stamp_meta({"schema": SCHEMA, "smoke": smoke, "fixed": fixed,
+                       "policies": bench_pol,
+                       "adaptive_run": adaptive_run})
     return rows + arows, data
 
 

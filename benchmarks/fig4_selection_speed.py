@@ -25,7 +25,7 @@ import json
 
 import jax
 
-from benchmarks.common import timeit
+from benchmarks.common import stamp_meta, timeit
 from repro.core import compress_with_ef, get_compressor
 from repro.kernels.ef_fused import (choose_block, count_passes,
                                     fused_compress_ef, unfused_compress_ef)
@@ -165,7 +165,8 @@ def collect(smoke: bool = False):
     ef_rows, bench = _ef_pipeline_rows(smoke)
     d_rows, d_bench = _dispatch_rows()
     return (rows + ef_rows + d_rows,
-            {"schema": SCHEMA, "smoke": smoke, "rows": bench + d_bench})
+            stamp_meta({"schema": SCHEMA, "smoke": smoke,
+                        "rows": bench + d_bench}))
 
 
 def run(smoke: bool = False):

@@ -25,7 +25,7 @@ import json
 
 import numpy as np
 
-from benchmarks.common import simulate_sparsified_sgd
+from benchmarks.common import simulate_sparsified_sgd, stamp_meta
 
 BENCH_JSON = "BENCH_rtopk.json"
 SCHEMA = "rtopk/v1"
@@ -101,9 +101,9 @@ def _globalk_rows(smoke, run_cfg):
 def collect(smoke: bool = False):
     rows, bench_d, run_cfg = _density_rows(smoke)
     grows, bench_g = _globalk_rows(smoke, run_cfg)
-    data = {"schema": SCHEMA, "smoke": smoke,
-            "workers": run_cfg[0], "steps": run_cfg[1],
-            "densities": bench_d, "globalk": bench_g}
+    data = stamp_meta({"schema": SCHEMA, "smoke": smoke,
+                       "workers": run_cfg[0], "steps": run_cfg[1],
+                       "densities": bench_d, "globalk": bench_g})
     return rows + grows, data
 
 

@@ -153,10 +153,15 @@ def _step_rows(smoke: bool):
 
 
 def collect(smoke: bool = False):
+    # lazy: benchmarks.common imports jax, which must happen after this
+    # module's XLA_FLAGS setdefault
+    from benchmarks.common import stamp_meta
+
     d_rows, d_bench = _dispatch_rows()
     s_rows, s_bench = _step_rows(smoke)
     return (d_rows + s_rows,
-            {"schema": SCHEMA, "smoke": smoke, "rows": d_bench + s_bench})
+            stamp_meta({"schema": SCHEMA, "smoke": smoke,
+                        "rows": d_bench + s_bench}))
 
 
 def run(smoke: bool = False):

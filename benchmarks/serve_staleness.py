@@ -174,10 +174,15 @@ def _decode_rows(smoke: bool):
 
 
 def collect(smoke: bool = False):
+    # lazy: benchmarks.common imports jax, which must happen after this
+    # module's XLA_FLAGS setdefault
+    from benchmarks.common import stamp_meta
+
     s_rows, s_bench = _stream_rows()
     d_rows, d_bench = _decode_rows(smoke)
     return (s_rows + d_rows,
-            {"schema": SCHEMA, "smoke": smoke, "rows": s_bench + d_bench})
+            stamp_meta({"schema": SCHEMA, "smoke": smoke,
+                        "rows": s_bench + d_bench}))
 
 
 def run(smoke: bool = False):

@@ -94,7 +94,9 @@ def collect(smoke: bool = False):
                 rows.append((f"tuner/predict-{p.strategy}/{shape}",
                              p.total_s * 1e6,
                              f"messages={p.messages}"))
-    return rows, {"schema": SCHEMA, "smoke": smoke, "rows": bench}
+    from benchmarks.common import stamp_meta
+    return rows, stamp_meta({"schema": SCHEMA, "smoke": smoke,
+                             "rows": bench})
 
 
 def run(smoke: bool = False):

@@ -1,0 +1,30 @@
+#!/usr/bin/env bash
+# Pinned-environment launcher (DESIGN.md §15).
+#
+# Usage:  ./run.sh <command...>
+#   e.g.  ./run.sh python -m benchmarks.fig4_selection_speed --json BENCH_fig4.json
+#         ./run.sh python -m pytest -x -q
+#
+# Evaluates the export lines of `repro.launch.env --shell` (tcmalloc
+# LD_PRELOAD when present, merged XLA_FLAGS with a deterministic host
+# device count and step-marker location, x32 dtype policy) BEFORE the
+# target process starts — LD_PRELOAD and XLA_FLAGS are read once at
+# startup, so setting them from inside Python is too late.  Variables
+# already set in the caller's environment win (the emitter only fills
+# holes), so CI legs can still override e.g. REPRO_KERNEL_BACKEND.
+set -euo pipefail
+
+cd "$(dirname "$0")"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# env.py --shell never imports jax, so this is cheap and side-effect free
+eval "$(python -m repro.launch.env --shell)"
+
+if [ "$#" -eq 0 ]; then
+    echo "usage: ./run.sh <command...>" >&2
+    echo "pinned environment:" >&2
+    python -m repro.launch.env >&2
+    exit 2
+fi
+
+exec "$@"

@@ -1,4 +1,4 @@
-"""Fused error-feedback compression pipeline (DESIGN.md §8).
+"""Fused error-feedback compression pipeline (DESIGN.md §8, §15).
 
 One Pallas pass streams ``g`` and ``e`` block-wise and accumulates the
 statistics the threshold needs (moments and, for hist-k, the magnitude
@@ -11,6 +11,11 @@ final pass threshold-compacts the selection AND writes the new residual
 decode, no residual subtract.  ~8 HBM passes per leaf become ~3
 (Gaussian-k) or 2 (hist-k), bit-for-bit equal to the unfused kernel
 pipeline.
+
+The pipeline lowers through three kernel backends (``tuning``): Mosaic
+on TPU, Triton on GPU (parallel-grid kernel shapes, one extra residual
+pass — 4/3 total), interpreter elsewhere; block sizes come from a
+per-platform autotuned ``KernelConfig`` table.
 """
 from repro.kernels.ef_fused.ops import (FUSED_COMPRESSORS, choose_block,
                                         choose_stats_block, fused_compress_ef,
@@ -20,9 +25,14 @@ from repro.kernels.ef_fused.passes import count_passes
 from repro.kernels.ef_fused.segmented import (rows_compress_ef, rows_pass_a,
                                               segmented_compress_ef,
                                               segmented_pass_a)
+from repro.kernels.ef_fused.tuning import (BACKENDS, KernelConfig,
+                                           resolve_backend, resolve_config,
+                                           use_backend)
 
 __all__ = ["FUSED_COMPRESSORS", "choose_block", "choose_stats_block",
            "fused_compress_ef", "fused_pass_a", "supports_fused",
            "unfused_compress_ef", "count_passes",
            "rows_compress_ef", "rows_pass_a", "segmented_compress_ef",
-           "segmented_pass_a"]
+           "segmented_pass_a",
+           "BACKENDS", "KernelConfig", "resolve_backend", "resolve_config",
+           "use_backend"]

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: pass B of the fused EF pipeline — threshold-compact
+"""Pallas kernel: pass B of the fused EF pipeline — threshold-compact
 AND residual write in one sweep.
 
 The unfused pipeline pays three leaf-sized passes after selection: the
@@ -7,9 +7,9 @@ block compaction, a dense ``decode`` of the selected pairs, and the
 at compaction time: every element is either on the wire (residual 0) or
 it is not (residual ``u``).  This kernel streams ``g`` (+ optional
 ``e``), forms ``u`` in registers, stages the compacted values/offsets
-exactly like ``gaussian_topk/threshold_compact`` (same one-hot-matmul
-trick, same staging layout, so the downstream assembly is shared) and
-writes ``e'`` in the same sweep.
+exactly like ``gaussian_topk/threshold_compact`` (same staging layout,
+so the downstream assembly is shared) and writes ``e'`` in the same
+sweep.
 
 Global-capacity truncation: an element can be staged per-block yet still
 dropped by the final ``k_cap`` assembly cut.  TPU grids are sequential,
@@ -18,6 +18,20 @@ preceding blocks; with it the kernel knows each element's global slot
 ``enc_before + pos`` and keeps exactly the wire-surviving elements out
 of ``e'`` — the dropped ones stay in the residual, preserving Eq. (2)
 conservation bit-for-bit.
+
+The ``triton`` lowering cannot carry ``enc_before`` across grid programs
+(parallel CTAs), so it splits into TWO race-free passes: a staging
+kernel that emits each block's ``(vals, offs, cnt)`` to its own rows,
+then — after an exact i32 exclusive cumsum of the capped counts in XLA —
+a residual kernel that re-streams the operands with each block's
+``enc_before`` scalar and writes ``e'``.  One extra HBM pass on GPU
+(4 total for Gaussian-k vs the TPU shape's 3), still far below the
+~8-pass unfused baseline.  Two further Triton-specific choices keep the
+output bit-equal to the sequential lowering: staging uses a masked
+select-and-sum instead of the one-hot f32 matmul (``tl.dot`` may round
+f32 through tf32, which would corrupt staged values and offsets — block
+offsets up to 8191 exceed tf32's exact-integer range), and the cumsum
+runs in i32 where addition is exact in any association.
 """
 from __future__ import annotations
 
@@ -27,10 +41,52 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.ef_fused.tuning import gpu_compiler_params
 from repro.kernels.gaussian_topk.threshold_compact import SENTINEL
 
 
+def _block_select(x: jax.Array, thres, bcap: int):
+    """Shared per-block selection: (mask, pos, keep, cnt)."""
+    mask = jnp.abs(x) > thres
+    cnt = jnp.sum(mask.astype(jnp.int32))
+    pos = jnp.cumsum(mask.astype(jnp.int32)) - 1
+    keep = mask & (pos < bcap)                    # staged in this block
+    return mask, pos, keep, cnt
+
+
+def _stage(x: jax.Array, pos, keep, cnt, bcap: int, matmul: bool):
+    """Compact the kept elements into the (bcap,) staging rows.
+
+    ``matmul=True`` is the Mosaic shape (one-hot f32 matmul on the MXU);
+    ``matmul=False`` selects with ``where``+``sum`` — bit-equal (each
+    staging row has at most one nonzero term and float adds with ±0.0
+    are exact) but safe on Triton, where ``tl.dot`` may apply tf32.
+    """
+    b = x.shape[0]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (bcap, b), 0)
+    sel = (rows == pos[None, :]) & keep[None, :]
+    if matmul:
+        oh = sel.astype(jnp.float32)
+        vals = oh @ x
+        offs_f = oh @ jax.lax.broadcasted_iota(jnp.float32, (b,), 0)
+    else:
+        vals = jnp.sum(jnp.where(sel, x[None, :], 0.0), axis=1)
+        iota = jax.lax.broadcasted_iota(jnp.float32, (1, b), 1)
+        offs_f = jnp.sum(jnp.where(sel, iota, 0.0), axis=1)
+    got = jnp.arange(bcap, dtype=jnp.int32) < jnp.minimum(cnt, bcap)
+    offs = jnp.where(got, offs_f.astype(jnp.int32), SENTINEL)
+    return vals, offs
+
+
+def _load_u(t_ref, g_ref, e_ref):
+    x = g_ref[0, :].astype(jnp.float32)
+    if e_ref is not None:
+        x = x + e_ref[0, :].astype(jnp.float32)
+    return x, t_ref[0, 0]
+
+
 def _kernel(*refs, has_e: bool, bcap: int, k_cap: int, with_resid: bool):
+    """Sequential-grid lowering: staging + residual in ONE sweep."""
     n_in = 3 if has_e else 2
     if has_e:
         t_ref, g_ref, e_ref = refs[:n_in]
@@ -46,24 +102,11 @@ def _kernel(*refs, has_e: bool, bcap: int, k_cap: int, with_resid: bool):
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    x = g_ref[0, :].astype(jnp.float32)
-    if has_e:
-        x = x + e_ref[0, :].astype(jnp.float32)
-    b = x.shape[0]
-    thres = t_ref[0, 0]
-    mask = jnp.abs(x) > thres
-    cnt = jnp.sum(mask.astype(jnp.int32))
-    pos = jnp.cumsum(mask.astype(jnp.int32)) - 1
-    keep = mask & (pos < bcap)                    # staged in this block
+    x, thres = _load_u(t_ref, g_ref, e_ref)
+    _, pos, keep, cnt = _block_select(x, thres, bcap)
     enc_before = acc_ref[0, 0]                    # staged slots before us
 
-    rows = jax.lax.broadcasted_iota(jnp.int32, (bcap, b), 0)
-    oh = ((rows == pos[None, :]) & keep[None, :]).astype(jnp.float32)
-    vals = oh @ x
-    offs_f = oh @ jax.lax.broadcasted_iota(jnp.float32, (b,), 0)
-    got = jnp.arange(bcap, dtype=jnp.int32) < jnp.minimum(cnt, bcap)
-    offs = jnp.where(got, offs_f.astype(jnp.int32), SENTINEL)
-
+    vals, offs = _stage(x, pos, keep, cnt, bcap, matmul=True)
     vals_ref[0, :] = vals
     offs_ref[0, :] = offs
     cnt_ref[0, 0] = cnt
@@ -77,14 +120,44 @@ def _kernel(*refs, has_e: bool, bcap: int, k_cap: int, with_resid: bool):
     acc_ref[0, 0] = enc_before + jnp.minimum(cnt, bcap)
 
 
+def _stage_kernel(*refs, has_e: bool, bcap: int):
+    """Triton pass 1: per-block staging rows, no cross-program state."""
+    if has_e:
+        t_ref, g_ref, e_ref, vals_ref, offs_ref, cnt_ref = refs
+    else:
+        (t_ref, g_ref, vals_ref, offs_ref, cnt_ref), e_ref = refs, None
+    x, thres = _load_u(t_ref, g_ref, e_ref)
+    _, pos, keep, cnt = _block_select(x, thres, bcap)
+    vals, offs = _stage(x, pos, keep, cnt, bcap, matmul=False)
+    vals_ref[0, :] = vals
+    offs_ref[0, :] = offs
+    cnt_ref[0, :] = jnp.full((128,), cnt, jnp.int32)
+
+
+def _resid_kernel(*refs, has_e: bool, bcap: int, k_cap: int):
+    """Triton pass 2: residual write, given this block's ``enc_before``."""
+    if has_e:
+        t_ref, enc_ref, g_ref, e_ref, newe_ref = refs
+    else:
+        (t_ref, enc_ref, g_ref, newe_ref), e_ref = refs, None
+    x, thres = _load_u(t_ref, g_ref, e_ref)
+    _, pos, keep, _ = _block_select(x, thres, bcap)
+    on_wire = keep & (enc_ref[0, 0] + pos < k_cap)
+    newe_ref[0, :] = jnp.where(on_wire, 0.0, x).astype(newe_ref.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("bcap", "k_cap", "block",
                                              "out_dtype", "with_resid",
-                                             "interpret"))
+                                             "backend", "num_warps",
+                                             "num_stages", "interpret"))
 def compact_residual(g2d: jax.Array, e2d: jax.Array | None,
                      thres: jax.Array, *, bcap: int, k_cap: int,
                      block: int = 2048, out_dtype=jnp.float32,
-                     with_resid: bool = True, interpret: bool = True):
-    """One pass: staging buffers for the codec assembly + the new residual.
+                     with_resid: bool = True, backend: str = "interpret",
+                     num_warps: int = 4, num_stages: int = 2,
+                     interpret: bool = True):
+    """One (or, on Triton, two) passes: staging buffers for the codec
+    assembly + the new residual.
 
     Returns ``(vals, offs, counts, new_e2d)``; the first three match
     ``threshold_compact``'s contract (shared assembly), ``new_e2d`` is
@@ -100,8 +173,50 @@ def compact_residual(g2d: jax.Array, e2d: jax.Array | None,
     t = jnp.asarray(thres, jnp.float32).reshape(1, 1)
     operands = (t, g2d, e2d) if has_e else (t, g2d)
     data_spec = pl.BlockSpec((1, block), lambda i: (i, 0))
-    in_specs = [pl.BlockSpec((1, 1), lambda i: (0, 0))]
-    in_specs += [data_spec] * (len(operands) - 1)
+    scalar_spec = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    in_specs = [scalar_spec] + [data_spec] * (len(operands) - 1)
+    params = gpu_compiler_params(backend, num_warps, num_stages)
+
+    if backend == "triton":
+        stage_specs = [
+            pl.BlockSpec((1, bcap), lambda i: (i, 0)),
+            pl.BlockSpec((1, bcap), lambda i: (i, 0)),
+            pl.BlockSpec((1, 128), lambda i: (i, 0)),
+        ]
+        stage_shape = [
+            jax.ShapeDtypeStruct((nblocks, bcap), jnp.float32),
+            jax.ShapeDtypeStruct((nblocks, bcap), jnp.int32),
+            jax.ShapeDtypeStruct((nblocks, 128), jnp.int32),
+        ]
+        vals, offs, cnts = pl.pallas_call(
+            functools.partial(_stage_kernel, has_e=has_e, bcap=bcap),
+            grid=(nblocks,),
+            in_specs=in_specs,
+            out_specs=stage_specs,
+            out_shape=stage_shape,
+            interpret=interpret,
+            compiler_params=params,
+        )(*operands)
+        newe = None
+        if with_resid:
+            # exact i32 exclusive cumsum of the capped per-block counts
+            capped = jnp.minimum(cnts[:, 0], bcap)
+            enc_before = (jnp.cumsum(capped) - capped).reshape(-1, 1)
+            resid_in_specs = ([scalar_spec,
+                               pl.BlockSpec((1, 1), lambda i: (i, 0))]
+                              + [data_spec] * (len(operands) - 1))
+            newe = pl.pallas_call(
+                functools.partial(_resid_kernel, has_e=has_e, bcap=bcap,
+                                  k_cap=k_cap),
+                grid=(nblocks,),
+                in_specs=resid_in_specs,
+                out_specs=pl.BlockSpec((1, block), lambda i: (i, 0)),
+                out_shape=jax.ShapeDtypeStruct((nblocks, block), out_dtype),
+                interpret=interpret,
+                compiler_params=params,
+            )(operands[0], enc_before, *operands[1:])
+        return vals, offs, cnts[:, 0], newe
+
     out_specs = [
         pl.BlockSpec((1, bcap), lambda i: (i, 0)),
         pl.BlockSpec((1, bcap), lambda i: (i, 0)),

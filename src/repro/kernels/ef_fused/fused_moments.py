@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: pass A of the fused EF pipeline.
+"""Pallas kernel: pass A of the fused EF pipeline (Mosaic + Triton).
 
 Streams ``g`` (and optionally ``e``) block-wise, forms ``u = g + e`` in
 registers and accumulates every statistic the threshold stage needs —
@@ -7,10 +7,20 @@ histogram — WITHOUT writing ``u`` back to HBM.  This fuses the unfused
 pipeline's ``u = g + e`` materialization pass with the ``moments`` (and
 ``abs_histogram``) passes into a single read of the operands.
 
-The accumulator layout and update ops replicate ``kernels/moments`` and
-``kernels/histk/hist`` exactly, so the fused statistics are bit-for-bit
-equal to the unfused kernels' (same per-block partial sums, same
-sequential-grid accumulation order).
+Two lowerings share the per-block math (DESIGN.md §15):
+
+* ``mosaic``/``interpret`` — the TPU shape: the grid is SEQUENTIAL, so
+  one revisited ``(1, 128)`` accumulator carries the running statistics
+  across grid steps (same layout and update ops as ``kernels/moments``
+  and ``kernels/histk/hist``, so the fused statistics are bit-for-bit
+  equal to the unfused kernels');
+* ``triton`` — GPU grid programs are PARALLEL CTAs, so a revisited
+  accumulator would race.  Each program writes its partials to its OWN
+  output row instead, and the host combines them with an in-order
+  left fold — ``((0 + p_0) + p_1) + …`` — which is exactly the float
+  addition sequence the sequential grid performs, so the result is
+  bit-equal to the Mosaic path at the same block size.  (max is
+  associative; histogram adds are exact integer-valued f32 counts.)
 """
 from __future__ import annotations
 
@@ -20,15 +30,39 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.ef_fused.tuning import gpu_compiler_params
 from repro.kernels.histk.hist import BINS, _bin_of
 
 
-def _kernel(*refs, has_e: bool, with_hist: bool):
+def _block_stats(x: jax.Array, with_hist: bool):
+    """The shared per-block statistics: (s, sq, mx[, hist-row])."""
+    s = jnp.sum(x)
+    sq = jnp.sum(x * x)
+    mx = jnp.max(jnp.abs(x))
+    if not with_hist:
+        return s, sq, mx, None
+    absx = jnp.abs(x)
+    b = _bin_of(absx)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (BINS, x.shape[0]), 0)
+    oh = (rows == b[None, :]).astype(jnp.float32)
+    h = oh @ jnp.ones((x.shape[0],), jnp.float32)
+    return s, sq, mx, h
+
+
+def _load_u(refs, has_e: bool):
     if has_e:
         g_ref, e_ref = refs[0], refs[1]
         out = refs[2:]
+        x = g_ref[0, :].astype(jnp.float32) + e_ref[0, :].astype(jnp.float32)
     else:
         g_ref, out = refs[0], refs[1:]
+        x = g_ref[0, :].astype(jnp.float32)
+    return x, out
+
+
+def _kernel(*refs, has_e: bool, with_hist: bool):
+    """Sequential-grid lowering: one revisited accumulator row."""
+    x, out = _load_u(refs, has_e)
     acc_ref = out[0]
     i = pl.program_id(0)
 
@@ -37,48 +71,76 @@ def _kernel(*refs, has_e: bool, with_hist: bool):
         for r in out:
             r[...] = jnp.zeros_like(r)
 
-    x = g_ref[0, :].astype(jnp.float32)
-    if has_e:
-        x = x + e_ref[0, :].astype(jnp.float32)
-
-    s = jnp.sum(x)
-    sq = jnp.sum(x * x)
-    mx = jnp.max(jnp.abs(x))
+    s, sq, mx, h = _block_stats(x, with_hist)
     acc = acc_ref[0, :]
     acc_ref[0, :] = jnp.concatenate([
         (acc[0] + s)[None], (acc[1] + sq)[None],
         jnp.maximum(acc[2], mx)[None], acc[3:],
     ])
-
     if with_hist:
-        hist_ref = out[1]
-        absx = jnp.abs(x)
-        b = _bin_of(absx)
-        rows = jax.lax.broadcasted_iota(jnp.int32, (BINS, x.shape[0]), 0)
-        oh = (rows == b[None, :]).astype(jnp.float32)
-        h = oh @ jnp.ones((x.shape[0],), jnp.float32)
-        hist_ref[0, :] = hist_ref[0, :] + h
+        out[1][0, :] = out[1][0, :] + h
 
 
-@functools.partial(jax.jit, static_argnames=("block", "with_hist",
+def _partials_kernel(*refs, has_e: bool, with_hist: bool):
+    """Parallel-grid (Triton) lowering: each program owns an output row."""
+    x, out = _load_u(refs, has_e)
+    s, sq, mx, h = _block_stats(x, with_hist)
+    pad = jnp.zeros((125,), jnp.float32)
+    out[0][0, :] = jnp.concatenate([s[None], sq[None], mx[None], pad])
+    if with_hist:
+        out[1][0, :] = h
+
+
+def _combine_partials(parts: jax.Array, hist_parts, nblocks: int):
+    """Host-side fold of the per-block partial rows.
+
+    s/sq fold strictly left-to-right in block order — the exact addition
+    sequence of the sequential grid; max is order-free; the histogram
+    rows hold integer counts < 2^24, so their f32 sum is exact in any
+    order.
+    """
+    def body(i, carry):
+        s, sq, mx = carry
+        return (s + parts[i, 0], sq + parts[i, 1],
+                jnp.maximum(mx, parts[i, 2]))
+
+    zero = jnp.float32(0.0)
+    s, sq, mx = jax.lax.fori_loop(0, nblocks, body, (zero, zero, zero))
+    h = None if hist_parts is None else jnp.sum(hist_parts, axis=0)
+    return s, sq, mx, h
+
+
+@functools.partial(jax.jit, static_argnames=("block", "with_hist", "backend",
+                                             "num_warps", "num_stages",
                                              "interpret"))
 def fused_moments(g2d: jax.Array, e2d: jax.Array | None = None, *,
                   block: int = 2048, with_hist: bool = False,
-                  interpret: bool = True):
+                  backend: str = "interpret", num_warps: int = 4,
+                  num_stages: int = 2, interpret: bool = True):
     """(sum, sumsq, absmax[, hist]) of ``u = g + e`` over (nblocks, block)
-    operands — one HBM pass, ``u`` never materialized."""
+    operands — one HBM pass, ``u`` never materialized.
+
+    ``backend`` picks the kernel SHAPE (sequential accumulator vs
+    parallel partials); ``interpret`` picks the EXECUTION engine —
+    ``backend="triton", interpret=True`` runs the GPU lowering under the
+    Pallas interpreter (the CPU CI smoke path).
+    """
     nblocks, b = g2d.shape
     assert b == block, (g2d.shape, block)
     has_e = e2d is not None
     operands = (g2d, e2d) if has_e else (g2d,)
     data_spec = pl.BlockSpec((1, block), lambda i: (i, 0))
-    acc_spec = pl.BlockSpec((1, 128), lambda i: (0, 0))
-    out_specs = [acc_spec]
-    out_shape = [jax.ShapeDtypeStruct((1, 128), jnp.float32)]
+    parallel = backend == "triton"
+    acc_rows = nblocks if parallel else 1
+    row_spec = ((lambda i: (i, 0)) if parallel else (lambda i: (0, 0)))
+    out_specs = [pl.BlockSpec((1, 128), row_spec)]
+    out_shape = [jax.ShapeDtypeStruct((acc_rows, 128), jnp.float32)]
     if with_hist:
-        out_specs.append(pl.BlockSpec((1, BINS), lambda i: (0, 0)))
-        out_shape.append(jax.ShapeDtypeStruct((1, BINS), jnp.float32))
-    kern = functools.partial(_kernel, has_e=has_e, with_hist=with_hist)
+        out_specs.append(pl.BlockSpec((1, BINS), row_spec))
+        out_shape.append(jax.ShapeDtypeStruct((acc_rows, BINS), jnp.float32))
+    kern = functools.partial(
+        _partials_kernel if parallel else _kernel,
+        has_e=has_e, with_hist=with_hist)
     outs = pl.pallas_call(
         kern,
         grid=(nblocks,),
@@ -86,7 +148,12 @@ def fused_moments(g2d: jax.Array, e2d: jax.Array | None = None, *,
         out_specs=out_specs,
         out_shape=out_shape,
         interpret=interpret,
+        compiler_params=gpu_compiler_params(backend, num_warps, num_stages),
     )(*operands)
+    if parallel:
+        s, sq, mx, h = _combine_partials(
+            outs[0], outs[1] if with_hist else None, nblocks)
+        return s, sq, mx, h
     acc = outs[0]
     if with_hist:
         return acc[0, 0], acc[0, 1], acc[0, 2], outs[1][0]

@@ -6,8 +6,8 @@ leaf's ``(model_size, d_row)`` rows into one contiguous
 ``(model_size, d_row_total)`` bucket.  The ops here run the fused EF
 pipeline (§8) over that bucket per static column segment:
 
-* each segment keeps its OWN block configuration (``choose_block`` /
-  ``choose_stats_block`` of its ``d_row``), so every per-row kernel call
+* each segment keeps its OWN block configuration (``tuning.
+  resolve_config`` of its ``d_row``), so every per-row kernel call
   is bit-identical to the per-leaf pipeline on the same values — the
   bucketing collapses *wire messages*, never numerics;
 * what the caller gets back is already bucket-shaped: one residual
@@ -17,6 +17,12 @@ pipeline (§8) over that bucket per static column segment:
 primitives (one leaf's ``(model_size, d_row)`` rows) used by BOTH the
 per-leaf path (``dist/aggregate.py``) and the segmented entry points —
 single source of truth for the bit-equality contract.
+
+Every entry point takes an optional kernel ``backend``
+(mosaic/triton/interpret, default: the platform resolution of
+``tuning.resolve_backend`` — which honors ``tuning.use_backend`` /
+``REPRO_KERNEL_BACKEND``, so callers that do not thread kernel kwargs,
+like ``dist/aggregate``, are still covered by a process-wide override).
 """
 from __future__ import annotations
 
@@ -28,18 +34,20 @@ import jax.numpy as jnp
 from repro.kernels.ef_fused.ops import fused_compress_ef, fused_pass_a
 
 
-def rows_pass_a(g_rows: jax.Array, e_rows: jax.Array, name: str) -> list:
+def rows_pass_a(g_rows: jax.Array, e_rows: jax.Array, name: str,
+                backend: Optional[str] = None) -> list:
     """Per-row pass-A statistic tuples of ``u = g + e`` for one
     ``(model_size, d_row)`` row block — each row with the exact
     block/fusion policy ``fused_compress_ef`` would choose for it, so the
     tuples can be handed back via its ``stats=`` argument bit-identically.
     """
-    return [fused_pass_a(g_rows[r], e_rows[r], name)
+    return [fused_pass_a(g_rows[r], e_rows[r], name, backend=backend)
             for r in range(g_rows.shape[0])]
 
 
 def rows_compress_ef(g_rows: jax.Array, e_rows: jax.Array, name: str, k, *,
-                     k_cap: int, row_stats=None):
+                     k_cap: int, row_stats=None,
+                     backend: Optional[str] = None):
     """Fused EF compression of one ``(model_size, d_row)`` row block.
 
     One fused pipeline per model-shard row — ``u = e + g`` accumulates
@@ -50,6 +58,7 @@ def rows_compress_ef(g_rows: jax.Array, e_rows: jax.Array, name: str, k, *,
     ``(model_size, k_cap)`` / ``(model_size, d_row)``.
     """
     outs = [fused_compress_ef(g_rows[r], e_rows[r], name, k, k_cap=k_cap,
+                              backend=backend,
                               stats=None if row_stats is None
                               else row_stats[r])
             for r in range(g_rows.shape[0])]
@@ -61,20 +70,22 @@ def rows_compress_ef(g_rows: jax.Array, e_rows: jax.Array, name: str, k, *,
 
 def segmented_pass_a(g2d: jax.Array, e2d: jax.Array,
                      segments: Sequence[Tuple[int, int]],
-                     name: str) -> List[list]:
+                     name: str,
+                     backend: Optional[str] = None) -> List[list]:
     """Pass A over the packed bucket: per ``(start, length)`` column
     segment, the per-row pass-A tuples of that segment's rows —
     bit-identical to running :func:`rows_pass_a` leaf-at-a-time (each
     segment keeps its own ``d_row``-derived block config)."""
     return [rows_pass_a(g2d[:, start:start + length],
-                        e2d[:, start:start + length], name)
+                        e2d[:, start:start + length], name, backend=backend)
             for start, length in segments]
 
 
 def segmented_compress_ef(g2d: jax.Array, e2d: jax.Array,
                           segments: Sequence[Tuple[int, int]], name: str,
                           ks: Sequence, k_caps: Sequence[int], *,
-                          stats: Optional[Sequence] = None):
+                          stats: Optional[Sequence] = None,
+                          backend: Optional[str] = None):
     """Fused threshold-compact + residual write over the bucket grid.
 
     Per ``(start, length)`` segment: run :func:`rows_compress_ef` on the
@@ -89,6 +100,6 @@ def segmented_compress_ef(g2d: jax.Array, e2d: jax.Array,
     for i, (start, length) in enumerate(segments):
         out.append(rows_compress_ef(
             g2d[:, start:start + length], e2d[:, start:start + length],
-            name, ks[i], k_cap=k_caps[i],
+            name, ks[i], k_cap=k_caps[i], backend=backend,
             row_stats=None if stats is None else stats[i]))
     return out

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: multi-threshold count — the refinement loop in ONE pass.
+"""Pallas kernel: multi-threshold count — the refinement loop in ONE pass.
 
 Algorithm 1's refinement loop re-counts ``|u| > thres`` at a threshold
 that depends on the previous count, which costs one HBM pass per
@@ -12,7 +12,10 @@ the resulting count table without touching HBM again — identical
 decisions, identical final threshold, 1 pass instead of ≤4.
 
 Like pass A the kernel streams ``g`` (+ optional ``e``) and forms ``u``
-in registers.
+in registers.  The ``triton`` lowering writes per-block count rows
+instead of revisiting one accumulator (GPU grid programs are parallel
+CTAs) and sums them outside the kernel — i32 addition is associative,
+so the combined counts are identical to the sequential grid's.
 """
 from __future__ import annotations
 
@@ -22,34 +25,56 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.ef_fused.tuning import gpu_compiler_params
+
+
+def _block_counts(refs, has_e: bool, n_t: int):
+    if has_e:
+        t_ref, g_ref, e_ref = refs[0], refs[1], refs[2]
+    else:
+        (t_ref, g_ref), e_ref = refs[:2], None
+    x = g_ref[0, :].astype(jnp.float32)
+    if has_e:
+        x = x + e_ref[0, :].astype(jnp.float32)
+    absx = jnp.abs(x)
+    t = t_ref[0, :n_t]                               # (n_t,) static slice
+    return jnp.sum((absx[None, :] > t[:, None]).astype(jnp.int32), axis=1)
+
 
 def _kernel(*refs, has_e: bool, n_t: int):
-    if has_e:
-        t_ref, g_ref, e_ref, acc_ref = refs
-    else:
-        t_ref, g_ref, acc_ref = refs
+    """Sequential-grid lowering: one revisited accumulator row."""
+    acc_ref = refs[-1]
     i = pl.program_id(0)
 
     @pl.when(i == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    x = g_ref[0, :].astype(jnp.float32)
-    if has_e:
-        x = x + e_ref[0, :].astype(jnp.float32)
-    absx = jnp.abs(x)
-    t = t_ref[0, :n_t]                               # (n_t,) static slice
-    c = jnp.sum((absx[None, :] > t[:, None]).astype(jnp.int32), axis=1)
+    c = _block_counts(refs[:-1], has_e, n_t)
     acc_ref[0, :n_t] = acc_ref[0, :n_t] + c
 
 
-@functools.partial(jax.jit, static_argnames=("n_t", "block", "interpret"))
+def _partials_kernel(*refs, has_e: bool, n_t: int):
+    """Parallel-grid (Triton) lowering: each program owns an output row."""
+    acc_ref = refs[-1]
+    c = _block_counts(refs[:-1], has_e, n_t)
+    pad = jnp.zeros((128 - n_t,), jnp.int32)
+    acc_ref[0, :] = jnp.concatenate([c, pad])
+
+
+@functools.partial(jax.jit, static_argnames=("n_t", "block", "backend",
+                                             "num_warps", "num_stages",
+                                             "interpret"))
 def tree_count(g2d: jax.Array, e2d: jax.Array | None, thresholds: jax.Array,
-               *, n_t: int, block: int = 2048, interpret: bool = True):
+               *, n_t: int, block: int = 2048, backend: str = "interpret",
+               num_warps: int = 4, num_stages: int = 2,
+               interpret: bool = True):
     """Counts of ``|g + e| > thresholds[j]`` for ``j < n_t`` — one pass.
 
     ``thresholds`` is a flat f32 vector of length ``n_t`` (padded to a
     128-lane tile internally).  Returns an ``(n_t,)`` i32 count vector.
+    ``backend`` picks the kernel shape (see module docstring);
+    ``interpret`` picks the execution engine.
     """
     nblocks, b = g2d.shape
     assert b == block and 0 < n_t <= 128, (g2d.shape, block, n_t)
@@ -60,13 +85,20 @@ def tree_count(g2d: jax.Array, e2d: jax.Array | None, thresholds: jax.Array,
     data_spec = pl.BlockSpec((1, block), lambda i: (i, 0))
     in_specs = [pl.BlockSpec((1, 128), lambda i: (0, 0))]
     in_specs += [data_spec] * (len(operands) - 1)
-    kern = functools.partial(_kernel, has_e=has_e, n_t=n_t)
+    parallel = backend == "triton"
+    acc_rows = nblocks if parallel else 1
+    row_spec = ((lambda i: (i, 0)) if parallel else (lambda i: (0, 0)))
+    kern = functools.partial(_partials_kernel if parallel else _kernel,
+                             has_e=has_e, n_t=n_t)
     acc = pl.pallas_call(
         kern,
         grid=(nblocks,),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, 128), lambda i: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((1, 128), jnp.int32),
+        out_specs=pl.BlockSpec((1, 128), row_spec),
+        out_shape=jax.ShapeDtypeStruct((acc_rows, 128), jnp.int32),
         interpret=interpret,
+        compiler_params=gpu_compiler_params(backend, num_warps, num_stages),
     )(*operands)
+    if parallel:
+        return jnp.sum(acc, axis=0)[:n_t]
     return acc[0, :n_t]

@@ -22,9 +22,10 @@ reduces to ``X_per_chip / rate``.
 from __future__ import annotations
 
 import re
-from dataclasses import asdict, dataclass
+from dataclasses import asdict, dataclass, field
 from typing import Dict, Optional
 
+from repro.launch.env import describe_env
 from repro.launch.topo import DEFAULT_HW, DEFAULT_LINK, HardwareSpec, LinkSpec
 
 PEAK_FLOPS = DEFAULT_HW.peak_flops   # legacy aliases — see module docstring
@@ -147,6 +148,10 @@ class Roofline:
     useful_ratio: float
     n_messages: float = 0.0
     hardware: str = DEFAULT_HW.name
+    # launch-environment snapshot (repro.launch.env.describe_env) — the
+    # pinned variables the numbers were measured/priced under, so every
+    # exported row records its provenance (DESIGN.md §15)
+    env: Dict[str, str] = field(default_factory=dict)
 
     def to_dict(self):
         return asdict(self)
@@ -172,7 +177,7 @@ def roofline_terms(flops: float, bytes_accessed: float, coll_bytes: float,
     return Roofline(flops, bytes_accessed, coll_bytes, c, m, n, dom,
                     model_flops_per_chip,
                     model_flops_per_chip / flops if flops else 0.0,
-                    n_messages, hw.name)
+                    n_messages, hw.name, describe_env())
 
 
 def overlapped_collective_s(compute_s: float, collective_s: float,

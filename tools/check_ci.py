@@ -23,6 +23,15 @@ Three invariants over ``.github/workflows/*.yml``:
    benchmark AND gates it (``--tuner-measured`` / ``--tuner-baseline``)
    — ungated, a flipped decision cell or a drifted dispatch model
    passes CI silently;
+5b. every benchmark invocation in the ``perf`` job runs under
+   ``./run.sh`` (the pinned launch environment, DESIGN.md §15) — an
+   unpinned benchmark produces numbers the per-platform baselines
+   cannot be compared against;
+5c. the workflow carries a ``triton-interpret`` job running the
+   fused-pipeline + compressor-conformance suites with
+   ``REPRO_KERNEL_BACKEND=triton`` — the GPU (Triton) kernel lowering
+   exercised under the Pallas interpreter on the CPU runner, the only
+   CI coverage the GPU code path gets without a GPU;
 6. the ``multihost`` job (when the workflow has one) runs
    ``tools/launch_multihost.py`` with BOTH legs live (no
    ``--skip-coordinate`` / ``--skip-validate``) — the coordinate leg is
@@ -108,6 +117,38 @@ def audit_perf(path: str, body: list) -> list:
             f"{path}: perf job emits BENCH_tuner.json but does not gate "
             "it (--tuner-measured/--tuner-baseline) — ungated, a "
             "flipped decision cell passes CI silently")
+    # invariant 5b: every benchmark module invocation is env-pinned
+    for ln in body:
+        if re.search(r"python -m benchmarks\.", ln) \
+                and "./run.sh" not in ln:
+            errors.append(
+                f"{path}: perf job runs a benchmark outside ./run.sh "
+                f"({ln.strip()!r}) — unpinned environment, numbers not "
+                "comparable to the committed baselines")
+    return errors
+
+
+def audit_triton_interpret(path: str, jobs: dict) -> list:
+    """Invariant 5c: the Triton kernel lowering is smoke-covered on CPU."""
+    if "triton-interpret" not in jobs:
+        return [f"{path}: no 'triton-interpret' job — the GPU (Triton) "
+                "Pallas lowering must be exercised in interpreter mode "
+                "on the CPU runner (REPRO_KERNEL_BACKEND=triton)"]
+    text = "\n".join(jobs["triton-interpret"])
+    errors = []
+    if "REPRO_KERNEL_BACKEND: triton" not in text \
+            and "REPRO_KERNEL_BACKEND=triton" not in text:
+        errors.append(
+            f"{path}: triton-interpret job does not set "
+            "REPRO_KERNEL_BACKEND=triton — without it the suite runs "
+            "the default interpreter lowering and the Triton kernel "
+            "shapes rot uncovered")
+    for suite in ("test_ef_fused.py", "test_compressor_conformance.py"):
+        if suite not in text:
+            errors.append(
+                f"{path}: triton-interpret job does not run tests/{suite} "
+                "— both the fused-pipeline and conformance contracts "
+                "must hold under the Triton lowering")
     return errors
 
 
@@ -151,6 +192,7 @@ def audit(path: str) -> list:
             errors += audit_perf(path, body)
         if name == "multihost":
             errors += audit_multihost(path, body)
+    errors += audit_triton_interpret(path, jobs)
     return errors
 
 

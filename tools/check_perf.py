@@ -89,6 +89,15 @@ invariant), the decided time must be the minimum over its candidates,
 and decisions + predicted message counts must match the committed
 baseline EXACTLY.
 
+Per-platform baselines (ISSUE 10): with ``--platform <name>`` every
+baseline path ``<root><ext>`` is resolved to ``<root>.<name><ext>``
+WHEN that file exists (e.g. ``benchmarks/baselines/fig4.gpu.json``),
+falling back to the plain file otherwise — so GPU runners gate against
+GPU numbers without touching the committed CPU baselines.  The measured
+file's recorded ``platform`` field (stamped by ``benchmarks/common``)
+must match ``--platform`` when both are present.  ``--update
+--platform <name>`` writes the suffixed baseline path.
+
 ``--update`` rewrites the baseline(s) from the measured file(s) instead
 of checking (run on the reference machine, commit the result).
 
@@ -104,10 +113,45 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import shutil
 import sys
 
 SCHEMA = "fig4/v1"
+
+
+def platform_baseline(path: str, platform: str, *,
+                      for_update: bool = False) -> str:
+    """Resolve a baseline path to its per-platform variant.
+
+    ``fig4.json`` + ``gpu`` -> ``fig4.gpu.json`` when that file exists
+    (always, with ``for_update=True`` — update creates it); otherwise
+    the plain path, so platforms without a committed baseline fall back
+    to the shared one instead of failing.
+    """
+    if not platform:
+        return path
+    root, ext = os.path.splitext(path)
+    candidate = f"{root}.{platform}{ext}"
+    if for_update or os.path.exists(candidate):
+        return candidate
+    return path
+
+
+def recorded_platform(path: str) -> str:
+    """The ``platform`` field stamped into a benchmark artifact
+    (empty for pre-stamping artifacts — the check is additive)."""
+    with open(path) as f:
+        return json.load(f).get("platform", "") or ""
+
+
+def check_platform(path: str, want: str) -> list:
+    got = recorded_platform(path)
+    if want and got and got != want:
+        return [f"{path}: measured on platform {got!r} but gating "
+                f"against --platform {want!r} baselines — numbers are "
+                "not comparable across platforms"]
+    return []
 
 
 def load(path: str) -> dict:
@@ -563,9 +607,17 @@ def main(argv=None) -> int:
                          "wire-strategy tuner gate)")
     ap.add_argument("--tuner-baseline", default="",
                     help="committed benchmarks/baselines/tuner.json")
+    ap.add_argument("--platform", default="",
+                    help="gate against per-platform baselines "
+                         "(<baseline>.<platform>.json when present, "
+                         "fallback to the plain file)")
     ap.add_argument("--update", action="store_true",
                     help="rewrite the baseline(s) from the measured file(s)")
     args = ap.parse_args(argv)
+
+    def bpath(path: str) -> str:
+        return platform_baseline(path, args.platform,
+                                 for_update=args.update)
 
     if bool(args.adaptk_measured) != bool(args.adaptk_baseline):
         raise SystemExit("--adaptk-measured and --adaptk-baseline go "
@@ -585,49 +637,52 @@ def main(argv=None) -> int:
 
     if args.update:
         load(args.measured)  # schema validation
-        shutil.copyfile(args.measured, args.baseline)
-        print(f"baseline updated: {args.baseline}")
+        shutil.copyfile(args.measured, bpath(args.baseline))
+        print(f"baseline updated: {bpath(args.baseline)}")
         if args.adaptk_measured:
             load_adaptk(args.adaptk_measured)
-            shutil.copyfile(args.adaptk_measured, args.adaptk_baseline)
-            print(f"baseline updated: {args.adaptk_baseline}")
+            shutil.copyfile(args.adaptk_measured,
+                            bpath(args.adaptk_baseline))
+            print(f"baseline updated: {bpath(args.adaptk_baseline)}")
         if args.rtopk_measured:
             load_rtopk(args.rtopk_measured)
-            shutil.copyfile(args.rtopk_measured, args.rtopk_baseline)
-            print(f"baseline updated: {args.rtopk_baseline}")
+            shutil.copyfile(args.rtopk_measured, bpath(args.rtopk_baseline))
+            print(f"baseline updated: {bpath(args.rtopk_baseline)}")
         if args.overlap_measured:
             load_overlap(args.overlap_measured)
-            shutil.copyfile(args.overlap_measured, args.overlap_baseline)
-            print(f"baseline updated: {args.overlap_baseline}")
+            shutil.copyfile(args.overlap_measured,
+                            bpath(args.overlap_baseline))
+            print(f"baseline updated: {bpath(args.overlap_baseline)}")
         if args.serve_measured:
             load_serve(args.serve_measured)
-            shutil.copyfile(args.serve_measured, args.serve_baseline)
-            print(f"baseline updated: {args.serve_baseline}")
+            shutil.copyfile(args.serve_measured, bpath(args.serve_baseline))
+            print(f"baseline updated: {bpath(args.serve_baseline)}")
         if args.tuner_measured:
             load_tuner(args.tuner_measured)
-            shutil.copyfile(args.tuner_measured, args.tuner_baseline)
-            print(f"baseline updated: {args.tuner_baseline}")
+            shutil.copyfile(args.tuner_measured, bpath(args.tuner_baseline))
+            print(f"baseline updated: {bpath(args.tuner_baseline)}")
         return 0
 
-    errors = check(load(args.measured), load(args.baseline),
-                   args.max_regression)
+    errors = check_platform(args.measured, args.platform)
+    errors += check(load(args.measured), load(bpath(args.baseline)),
+                    args.max_regression)
     if args.adaptk_measured:
         errors += check_adaptk(load_adaptk(args.adaptk_measured),
-                               load_adaptk(args.adaptk_baseline))
+                               load_adaptk(bpath(args.adaptk_baseline)))
     if args.rtopk_measured:
         errors += check_rtopk(load_rtopk(args.rtopk_measured),
-                              load_rtopk(args.rtopk_baseline))
+                              load_rtopk(bpath(args.rtopk_baseline)))
     if args.overlap_measured:
         errors += check_overlap(load_overlap(args.overlap_measured),
-                                load_overlap(args.overlap_baseline),
+                                load_overlap(bpath(args.overlap_baseline)),
                                 args.overlap_tol)
     if args.serve_measured:
         errors += check_serve(load_serve(args.serve_measured),
-                              load_serve(args.serve_baseline),
+                              load_serve(bpath(args.serve_baseline)),
                               args.serve_tol)
     if args.tuner_measured:
         errors += check_tuner(load_tuner(args.tuner_measured),
-                              load_tuner(args.tuner_baseline))
+                              load_tuner(bpath(args.tuner_baseline)))
     for e in errors:
         print(f"PERF FAIL: {e}")
     if not errors:
